@@ -1,0 +1,55 @@
+"""Kernel micro-benchmarks (interpret-mode correctness + XLA-oracle timing
+on CPU; real timings require the TPU target)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.kernels import ops, ref
+
+
+def main() -> None:
+    key = jax.random.key(0)
+    ks = jax.random.split(key, 3)
+    b, s, h, kv, d = 1, 512, 4, 2, 64
+    q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, kv, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, kv, d), jnp.float32)
+
+    qt, kt, vt = (x.transpose(0, 2, 1, 3) for x in (q, k, v))
+    oracle = jax.jit(lambda q_, k_, v_: ref.attention_ref(q_, k_, v_,
+                                                          causal=True))
+    oracle(qt, kt, vt).block_until_ready()
+    t0 = time.time()
+    for _ in range(5):
+        oracle(qt, kt, vt).block_until_ready()
+    oracle_us = (time.time() - t0) / 5 * 1e6
+
+    out = ops.flash_attention(q, k, v, causal=True, interpret=True)
+    want = oracle(qt, kt, vt).transpose(0, 2, 1, 3)
+    err = float(jnp.max(jnp.abs(out - want)))
+    emit("flash_attention_512", oracle_us,
+         {"interpret_maxerr": f"{err:.2e}",
+          "flops": 4 * b * h * s * s * d, "note": "oracle-XLA time on CPU"})
+
+    la = -jax.random.uniform(ks[0], (1, 1024, 256), jnp.float32, 0.01, 1.0)
+    x = jax.random.normal(ks[1], (1, 1024, 256), jnp.float32)
+    lr_oracle = jax.jit(ref.linear_recurrence_ref)
+    lr_oracle(la, x).block_until_ready()
+    t0 = time.time()
+    for _ in range(5):
+        lr_oracle(la, x).block_until_ready()
+    lr_us = (time.time() - t0) / 5 * 1e6
+    out = ops.linear_recurrence(la, x, interpret=True)
+    err = float(jnp.max(jnp.abs(out - lr_oracle(la, x))))
+    emit("linear_recurrence_1k", lr_us,
+         {"interpret_maxerr": f"{err:.2e}",
+          "bytes": 3 * la.size * 4, "note": "oracle-XLA time on CPU"})
+
+
+if __name__ == "__main__":
+    main()

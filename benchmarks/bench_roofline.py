@@ -1,0 +1,47 @@
+"""Roofline summary from the dry-run record file (EXPERIMENTS.md §Roofline
+reads the same data).  Needs results/dryrun_*.jsonl produced by
+``python -m repro.launch.dryrun --all --unroll --json ...`` — falls back to
+a single live (reduced-config) measurement when absent."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def main() -> None:
+    path = os.path.join(RESULTS, "dryrun_roofline_opt.jsonl")   # post-§Perf
+    if not os.path.exists(path):
+        path = os.path.join(RESULTS, "dryrun_roofline.jsonl")
+    if not os.path.exists(path):
+        emit("roofline", 0.0, {"status": "no results/dryrun_roofline.jsonl; "
+                               "run repro.launch.dryrun --all --unroll"})
+        return
+    with open(path) as f:
+        recs = [json.loads(l) for l in f if l.strip()]
+    n_ok = sum(1 for r in recs if r.get("status") == "compiled")
+    n_skip = sum(1 for r in recs if r.get("status") == "skipped")
+    doms = {}
+    for r in recs:
+        if "roofline" in r:
+            d = r["roofline"]["dominant"]
+            doms[d] = doms.get(d, 0) + 1
+    emit("roofline_summary", 0.0,
+         {"compiled": n_ok, "skipped": n_skip, **doms})
+    for r in recs:
+        if "roofline" not in r:
+            continue
+        rf = r["roofline"]
+        emit(f"roofline_{r['arch']}_{r['shape']}", 0.0,
+             {"compute_s": f"{rf['compute_s']:.4g}",
+              "memory_s": f"{rf['memory_s']:.4g}",
+              "collective_s": f"{rf['collective_s']:.4g}",
+              "dominant": rf["dominant"],
+              "useful": f"{rf['useful_ratio']:.3f}"})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Shared benchmark plumbing: CSV emission + the paper's simulation configs."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List
+
+from repro.configs.hfl_mnist import CONFIG
+
+# A budget-friendly variant of the paper's 64-client setup for CI-speed runs;
+# pass full=True for the paper-faithful topology.  mu/delta raised so τ₁=3,
+# τ₂=6 give the classifier a real training signal per global round.
+# 12/48 = 25% participation per round, the paper's 16/64 scarcity ratio.
+SMALL = dataclasses.replace(CONFIG, n_clients=48, n_edges=4,
+                            clients_per_edge=3, min_samples=100,
+                            max_samples=400, hidden=64, input_dim=196,
+                            mu_const=4.0, delta_const=2.0)
+
+
+def emit(name: str, us_per_call: float, derived: Dict) -> str:
+    kv = ";".join(f"{k}={v}" for k, v in derived.items())
+    line = f"{name},{us_per_call:.1f},{kv}"
+    print(line, flush=True)
+    return line
+
+
+def timed(fn: Callable, *args, repeat: int = 1) -> float:
+    t0 = time.time()
+    for _ in range(repeat):
+        fn(*args)
+    return (time.time() - t0) / repeat * 1e6

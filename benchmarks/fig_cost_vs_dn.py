@@ -1,0 +1,22 @@
+"""Paper Fig. 15: total cost vs local model size d_n (1-4 Mbit)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from benchmarks.common import SMALL, emit
+from repro.core.hfl import HFLSimulation
+
+
+def main() -> None:
+    for mbit in (1, 2, 3, 4):
+        cfg = dataclasses.replace(SMALL, model_size_bits=mbit * 1e6)
+        sim = HFLSimulation(cfg, seed=4, iid=True)
+        t0 = time.time()
+        m = sim.run_round()
+        emit(f"cost_vs_dn_{mbit}mbit", (time.time() - t0) * 1e6,
+             {"cost": round(m.cost, 3), "time_s": round(m.total_time_s, 3)})
+
+
+if __name__ == "__main__":
+    main()

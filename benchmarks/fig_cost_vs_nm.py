@@ -1,0 +1,25 @@
+"""Paper Fig. 14: total cost vs clients-per-edge N_m (straggler effect)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from benchmarks.common import SMALL, emit
+from repro.core.hfl import HFLSimulation
+
+
+def main() -> None:
+    prev = None
+    for nm in (2, 3, 4, 5):
+        cfg = dataclasses.replace(SMALL, clients_per_edge=nm)
+        sim = HFLSimulation(cfg, seed=3, iid=True)
+        t0 = time.time()
+        m = sim.run_round()
+        emit(f"cost_vs_nm_{nm}", (time.time() - t0) * 1e6,
+             {"cost": round(m.cost, 3), "time_s": round(m.total_time_s, 3),
+              "energy_j": round(m.total_energy_j, 3)})
+        prev = m.cost
+
+
+if __name__ == "__main__":
+    main()

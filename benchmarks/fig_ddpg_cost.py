@@ -1,0 +1,61 @@
+"""Paper Fig. 13: total cost vs DDPG training episode, DDPG-RA vs
+RRA / FPA / FCA (all under FCEA association)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import SMALL, emit
+from repro.core import ddpg, env
+from repro.core.hfl import HFLSimulation
+
+
+def _mean_cost(e, allocator, agent, key, steps=20):
+    state, obs = e.reset(key)
+    costs = []
+    for t in range(steps):
+        key, k = jax.random.split(key)
+        if allocator == "ddpg":
+            act = ddpg.actor_apply(agent.actor, obs)
+        elif allocator == "rra":
+            act = env.rra_action(k, e.n_clients)
+        elif allocator == "fpa":   # fixed power, grid-optimised frequency
+            act = env.fpa_best_action(e, state.gains)
+        else:  # fca: fixed frequency, grid-optimised power
+            act = env.fca_best_action(e, state.gains)
+        state, obs, reward, rc = e.step(state, act)
+        costs.append(float(rc.cost))
+    return float(np.mean(costs))
+
+
+def main(episodes: int = 15) -> None:
+    sim = HFLSimulation(SMALL, seed=2, iid=True, allocator="ddpg")
+    t0 = time.time()
+    hist = sim.train_ddpg(episodes=episodes, steps_per_episode=30,
+                          warmup=64, hidden=64)
+    train_us = (time.time() - t0) * 1e6 / episodes
+    emit("ddpg_training", train_us,
+         {"first_ep_reward": round(hist["episode_reward"][0], 3),
+          "last_ep_reward": round(hist["episode_reward"][-1], 3),
+          "improved": hist["episode_reward"][-1]
+          >= hist["episode_reward"][0]})
+
+    assoc = jnp.asarray(sim._associate(), jnp.float32)
+    e = env.NomaHflEnv(SMALL, assoc, jnp.ones((SMALL.n_edges,)),
+                       jnp.asarray(sim.topo["dist"]),
+                       jnp.asarray(sim.data.counts, jnp.float32))
+    key = jax.random.key(7)
+    costs = {}
+    for allocator in ("ddpg", "rra", "fpa", "fca"):
+        costs[allocator] = _mean_cost(e, allocator, sim.agent, key)
+        emit(f"cost_{allocator}", 0.0, {"mean_cost": round(costs[allocator], 3)})
+    gain = {k: round(100 * (1 - costs["ddpg"] / v), 1)
+            for k, v in costs.items() if k != "ddpg"}
+    emit("ddpg_gain_pct", 0.0, gain)
+
+
+if __name__ == "__main__":
+    main()

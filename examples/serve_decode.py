@@ -1,0 +1,27 @@
+"""Batched serving example: prefill + autoregressive decode with KV caches
+over several architectures (dense GQA / hybrid RG-LRU / enc-dec audio).
+
+  PYTHONPATH=src python examples/serve_decode.py
+"""
+import subprocess
+import sys
+import os
+
+ARCHS = ["qwen3-8b", "recurrentgemma-9b", "whisper-large-v3"]
+
+
+def main() -> int:
+    env = dict(os.environ)
+    env.setdefault("PYTHONPATH", "src")
+    for arch in ARCHS:
+        print(f"=== serving {arch} (reduced) ===", flush=True)
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.launch.serve", "--arch", arch,
+             "--tokens", "12", "--batch", "2"], env=env)
+        if r.returncode != 0:
+            return r.returncode
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,82 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# Dry-run "profiler": compile one (arch x shape) and print the largest
+# collective ops + largest tensors from the post-SPMD HLO.
+import argparse
+import re
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import INPUT_SHAPES, get_config, input_specs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import make_prefill_step, make_serve_step, \
+    make_train_step
+from repro.launch.roofline import _shape_bytes, _group_size
+from repro.sharding import input_shardings, param_shardings
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", required=True)
+ap.add_argument("--shape", required=True)
+ap.add_argument("--unroll", action="store_true")
+ap.add_argument("--top", type=int, default=15)
+args = ap.parse_args()
+
+cfg = get_config(args.arch)
+if args.unroll:
+    cfg = cfg.replace(scan_layers=False)
+shape = INPUT_SHAPES[args.shape]
+mesh = make_production_mesh()
+specs = input_specs(cfg, shape)
+in_sh = input_shardings(specs, mesh, shape.global_batch)
+
+with mesh:
+    if shape.kind == "train":
+        step_fn, model, _ = make_train_step(cfg)
+        p_shapes = jax.eval_shape(model.init, jax.random.key(0))
+        p_sh = param_shardings(p_shapes, mesh)
+        o_sh = {"m": p_sh, "v": p_sh}
+        fn = jax.jit(step_fn, in_shardings=(p_sh, o_sh, None, in_sh),
+                     out_shardings=(p_sh, o_sh, None, None))
+        compiled = fn.lower(p_shapes, {"m": p_shapes, "v": p_shapes},
+                            jax.ShapeDtypeStruct((), jnp.int32),
+                            specs).compile()
+    elif shape.kind == "prefill":
+        step_fn, model = make_prefill_step(cfg)
+        p_shapes = jax.eval_shape(model.init, jax.random.key(0))
+        p_sh = param_shardings(p_shapes, mesh)
+        compiled = jax.jit(step_fn, in_shardings=(p_sh, in_sh)).lower(
+            p_shapes, specs).compile()
+    else:
+        step_fn, model = make_serve_step(cfg)
+        p_shapes = jax.eval_shape(model.init, jax.random.key(0))
+        p_sh = param_shardings(p_shapes, mesh)
+        fn = jax.jit(step_fn, in_shardings=(p_sh, in_sh["token"],
+                                            in_sh["cache"], in_sh["index"]),
+                     out_shardings=(in_sh["token"], in_sh["cache"]))
+        compiled = fn.lower(p_shapes, specs["token"], specs["cache"],
+                            specs["index"]).compile()
+
+text = compiled.as_text()
+rows = []
+for line in text.splitlines():
+    m = re.search(r"=\s*((?:\([^)]*\)|[a-z][a-z0-9]*\[[0-9,]*\](?:\{[^}]*\})?))\s+"
+                  r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                  r"collective-permute)(-start)?\(", line)
+    if not m:
+        continue
+    nbytes = _shape_bytes(m.group(1))
+    g = _group_size(line)
+    meta = re.search(r'op_name="([^"]*)"', line)
+    rows.append((nbytes, m.group(2), g, (meta.group(1) if meta else "")[-110:]))
+rows.sort(reverse=True)
+print(f"== top {args.top} collectives (result bytes, kind, group) ==")
+for nbytes, kind, g, name in rows[:args.top]:
+    print(f"{nbytes/1e9:9.3f} GB  {kind:<19} g={g:<4} {name}")
+print(f"total collective ops: {len(rows)}")
+ca = compiled.cost_analysis()
+print("flops/device:", ca.get("flops"), " bytes/device:",
+      ca.get("bytes accessed"))

@@ -1,0 +1,66 @@
+"""Render EXPERIMENTS.md tables from the dry-run jsonl records."""
+import json
+import sys
+
+
+def load(path):
+    try:
+        return [json.loads(l) for l in open(path) if l.strip()]
+    except FileNotFoundError:
+        return []
+
+
+def dryrun_table(recs):
+    hdr = ("| arch | shape | mesh | status | lower s | compile s | "
+           "args GB/dev | temp GB/dev | collectives |")
+    sep = "|" + "---|" * 9
+    rows = [hdr, sep]
+    for r in recs:
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | skipped: "
+                        f"{r['reason'][:48]} | | | | | |")
+            continue
+        mem = r.get("memory", {})
+        coll = r.get("roofline", {}).get("coll_breakdown", {})
+        coll_s = ",".join(f"{k.replace('all-','a')}:{v/1e9:.2f}GB"
+                          for k, v in coll.items()) or "none"
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['status']} | "
+            f"{r.get('lower_s','')} | {r.get('compile_s','')} | "
+            f"{mem.get('argument_gb',0):.2f} | {mem.get('temp_gb',0):.1f} | "
+            f"{coll_s} |")
+    return "\n".join(rows)
+
+
+def roofline_table(recs):
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| MODEL_FLOPS | useful ratio | what moves the dominant term |")
+    sep = "|" + "---|" * 9
+    rows = [hdr, sep]
+    hints = {
+        ("collective", "train"): "overlap grad all-reduce with bwd; "
+                                 "reduce-scatter instead of all-reduce",
+        ("collective", "other"): "re-shard activations to cut all-gathers",
+        ("memory", "train"): "microbatching (grad_accum) + bf16 master",
+        ("memory", "other"): "shrink/quantise the KV cache; fuse reads",
+        ("compute", "train"): "remat policy: save attn outputs",
+        ("compute", "other"): "larger decode batch per chip",
+    }
+    for r in recs:
+        if "roofline" not in r:
+            continue
+        rf = r["roofline"]
+        kind = "train" if r["shape"] == "train_4k" else "other"
+        hint = hints.get((rf["dominant"], kind), "")
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.3g} | "
+            f"{rf['memory_s']:.3g} | {rf['collective_s']:.3g} | "
+            f"**{rf['dominant']}** | {rf['model_flops']:.3g} | "
+            f"{rf['useful_ratio']:.3f} | {hint} |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    kind, path = sys.argv[1], sys.argv[2]
+    recs = load(path)
+    print(dryrun_table(recs) if kind == "dryrun" else roofline_table(recs))

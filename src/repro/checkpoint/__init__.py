@@ -1,0 +1,4 @@
+"""npz + JSON-manifest pytree checkpointing."""
+from repro.checkpoint.store import save_checkpoint, load_checkpoint, latest_step
+
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_step"]

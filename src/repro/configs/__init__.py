@@ -1,0 +1,45 @@
+"""Config registry: ``get_config("<arch-id>")`` -> ArchConfig.
+
+Every assigned architecture id maps to its module; ``qwen3-8b-sw4k`` is the
+beyond-paper sliding-window serve variant and ``hfl-mnist`` is the paper's
+own experiment config (a different dataclass — the HFL simulation).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (ArchConfig, InputShape, INPUT_SHAPES,
+                                input_specs, shape_applicable)
+
+_REGISTRY: Dict[str, str] = {
+    "recurrentgemma-9b": "repro.configs.recurrentgemma_9b",
+    "grok-1-314b": "repro.configs.grok_1_314b",
+    "paligemma-3b": "repro.configs.paligemma_3b",
+    "xlstm-125m": "repro.configs.xlstm_125m",
+    "stablelm-1.6b": "repro.configs.stablelm_1_6b",
+    "qwen1.5-110b": "repro.configs.qwen1_5_110b",
+    "qwen3-8b": "repro.configs.qwen3_8b",
+    "qwen3-8b-sw4k": "repro.configs.qwen3_8b_sw4k",
+    "llama4-maverick-400b-a17b": "repro.configs.llama4_maverick_400b_a17b",
+    "yi-34b": "repro.configs.yi_34b",
+    "whisper-large-v3": "repro.configs.whisper_large_v3",
+    "hfl-mnist": "repro.configs.hfl_mnist",
+}
+
+# The 10 assigned architectures (order of the assignment table).
+ASSIGNED: List[str] = [
+    "recurrentgemma-9b", "grok-1-314b", "paligemma-3b", "xlstm-125m",
+    "stablelm-1.6b", "qwen1.5-110b", "qwen3-8b",
+    "llama4-maverick-400b-a17b", "yi-34b", "whisper-large-v3",
+]
+
+
+def get_config(name: str):
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return importlib.import_module(_REGISTRY[name]).CONFIG
+
+
+def list_archs() -> List[str]:
+    return list(_REGISTRY)

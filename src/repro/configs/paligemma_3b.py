@@ -1,0 +1,30 @@
+"""PaliGemma-3B — VLM: SigLIP vision encoder + gemma decoder.
+
+[arXiv:2407.07726] 18L d_model=2048 8H (GQA kv=1 ⇒ MQA) d_ff=16384
+vocab=257216.  The SigLIP encoder + projector is a STUB per the assignment:
+``input_specs`` provides 256 precomputed patch embeddings that are prepended
+to the text tokens and attended with a prefix-LM mask (bidirectional over the
+multimodal prefix, causal afterwards) as in the paper.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="paligemma-3b",
+    arch_type="vlm",
+    source="arXiv:2407.07726",
+    n_layers=18,
+    d_model=2048,
+    n_heads=8,
+    n_kv_heads=1,
+    d_head=256,
+    d_ff=16_384,
+    vocab_size=257_216,
+    block_pattern=("attn",),
+    ffn_pattern=("dense",),
+    prefix_tokens=256,
+    activation="gelu",
+    embed_scale=True,
+    tie_embeddings=True,
+    supports_long_context=False,
+    long_context_note="pure full attention; 500k decode skipped",
+)

@@ -1,0 +1,16 @@
+"""Qwen3-8B sliding-window serve variant (beyond-paper).
+
+Same weights-shape family as qwen3-8b but every layer uses a 4096-token
+sliding window, which bounds the decode KV cache and makes long_500k
+tractable.  This is the dense-arch sliding-window variant the assignment
+allows for long-context decode.
+"""
+from repro.configs.qwen3_8b import CONFIG as _BASE
+
+CONFIG = _BASE.replace(
+    name="qwen3-8b-sw4k",
+    block_pattern=("swa",),
+    window=4096,
+    supports_long_context=True,
+    long_context_note="sliding-window variant: KV cache bounded at 4096",
+)

@@ -1,0 +1,26 @@
+"""xLSTM-125M — sLSTM + mLSTM blocks, alternating 1:1.
+
+[arXiv:2405.04517] 12L d_model=768 4H d_ff=0 vocab=50304.  d_ff=0 means the
+feed-forward capacity lives inside the blocks (mLSTM pf=2 up-projection,
+sLSTM pf=4/3 post-projection), per the paper.  Fully recurrent ⇒ O(1) decode
+state, so long_500k runs.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="xlstm-125m",
+    arch_type="ssm",
+    source="arXiv:2405.04517",
+    n_layers=12,
+    d_model=768,
+    n_heads=4,
+    n_kv_heads=4,
+    d_head=192,
+    d_ff=0,
+    vocab_size=50_304,
+    block_pattern=("mlstm", "slstm"),
+    ffn_pattern=("none", "none"),
+    tie_embeddings=True,
+    supports_long_context=True,
+    long_context_note="recurrent state only — O(1) memory per step",
+)

@@ -1,0 +1,77 @@
+"""Hierarchical model aggregation (paper Eqs. 11, 17).
+
+Client models live STACKED along a leading client axis (the vmap axis that
+the mesh `data` dimension shards), so edge aggregation is a data-weighted
+reduction over association groups and the semi-synchronous cloud aggregation
+is a masked reduction over edges — both single fused XLA reductions, which is
+the TPU-native mapping of the paper's client→edge→cloud hierarchy
+(DESIGN.md §3).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+def weighted_mean(stacked: Params, weights: jnp.ndarray) -> Params:
+    """Σ w_i · leaf_i / Σ w_i over the leading axis."""
+    total = jnp.maximum(jnp.sum(weights), 1e-12)
+
+    def avg(leaf):
+        w = weights.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(leaf.dtype)
+        return jnp.sum(leaf * w, axis=0) / total.astype(leaf.dtype)
+
+    return jax.tree.map(avg, stacked)
+
+
+def edge_aggregate(client_params: Params, assoc: jnp.ndarray,
+                   n_samples: jnp.ndarray) -> Params:
+    """Eq. 11 for every edge at once.
+
+    client_params: leaves (N, ...); assoc (N, M); n_samples (N,).
+    Returns leaves (M, ...) — edge m's data-weighted average of its clients.
+    """
+    w = assoc * n_samples[:, None]                    # (N, M)
+    denom = jnp.maximum(jnp.sum(w, axis=0), 1e-12)    # (M,)
+
+    def agg(leaf):
+        wl = w.astype(leaf.dtype)
+        out = jnp.einsum("nm,n...->m...", wl, leaf)
+        return out / denom.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(leaf.dtype)
+
+    return jax.tree.map(agg, client_params)
+
+
+def cloud_aggregate(edge_params: Params, z: jnp.ndarray,
+                    edge_data: jnp.ndarray) -> Params:
+    """Eq. 17: semi-synchronous masked aggregation over edges.
+
+    edge_params: leaves (M, ...); z (M,) selection mask; edge_data (M,)
+    aggregated data sizes D_{N_m}.
+    """
+    return weighted_mean(edge_params, z * edge_data)
+
+
+def broadcast_to_clients(params: Params, assoc: jnp.ndarray,
+                         edge_params: Params, client_params: Params) -> Params:
+    """Edge model broadcast: associated clients adopt their edge's model,
+    unassociated clients keep their local params."""
+    is_assoc = jnp.sum(assoc, axis=1) > 0             # (N,)
+
+    def pick(edge_leaf, client_leaf):
+        # client n's edge model (N, ...)
+        from_edge = jnp.einsum("nm,m...->n...", assoc.astype(edge_leaf.dtype),
+                               edge_leaf)
+        mask = is_assoc.reshape((-1,) + (1,) * (edge_leaf.ndim - 1))
+        return jnp.where(mask, from_edge, client_leaf)
+
+    return jax.tree.map(pick, edge_params, client_params)
+
+
+def replicate(params: Params, n: int) -> Params:
+    """Tile a single model into a stacked (n, ...) pytree."""
+    return jax.tree.map(lambda l: jnp.broadcast_to(l[None], (n,) + l.shape), params)

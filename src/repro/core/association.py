@@ -1,0 +1,114 @@
+"""Client-edge association policies (paper §III + §V benchmarks).
+
+* FCEA — the paper's fuzzy-based policy: each edge server ranks in-coverage
+  clients by fuzzy competency NO* and admits the top N_m; a client picked by
+  several edges goes to the *nearest* one, and the losing edges substitute
+  the next client in their queue (paper §III-B last paragraph).
+* GCEA — greedy single-criterion benchmark: strongest channel gain.
+* RCEA — random association benchmark.
+
+Association is control-plane work on small (N, M) arrays once per round —
+implemented with numpy on host for clarity; the resulting one-hot matrix
+feeds the jitted cost/aggregation paths.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+from repro.core import fuzzy
+
+
+def _resolve(order_per_edge: np.ndarray, dist: np.ndarray, quota: int,
+             coverage: np.ndarray) -> np.ndarray:
+    """Greedy conflict resolution.
+
+    order_per_edge: (M, N) client indices sorted by per-edge preference.
+    Returns assoc (N, M) one-hot.
+    """
+    m_edges, n_clients = order_per_edge.shape
+    assoc = np.zeros((n_clients, m_edges), dtype=np.int32)
+    # queue pointer per edge
+    ptr = np.zeros(m_edges, dtype=np.int64)
+    filled = np.zeros(m_edges, dtype=np.int64)
+    taken = np.full(n_clients, -1, dtype=np.int64)  # -> edge or -1
+
+    # Round-robin admission with nearest-edge conflict resolution: iterate
+    # until every edge filled its quota or exhausted its queue.
+    progress = True
+    while progress:
+        progress = False
+        for m in range(m_edges):
+            while filled[m] < quota and ptr[m] < n_clients:
+                c = order_per_edge[m, ptr[m]]
+                ptr[m] += 1
+                if not coverage[c, m]:
+                    continue
+                if taken[c] == -1:
+                    taken[c] = m
+                    filled[m] += 1
+                    progress = True
+                    break
+                other = taken[c]
+                if other != m and dist[c, m] < dist[c, other]:
+                    # steal: client prefers the nearer edge; the loser refills
+                    taken[c] = m
+                    filled[m] += 1
+                    filled[other] -= 1
+                    progress = True
+                    break
+    for c in range(n_clients):
+        if taken[c] >= 0:
+            assoc[c, taken[c]] = 1
+    return assoc
+
+
+def fcea(scores: np.ndarray, dist: np.ndarray, quota: int,
+         coverage_radius_m: float) -> np.ndarray:
+    """Fuzzy-based association.
+
+    scores: (N,) one competency per client, or (N, M) per (client, edge) —
+    the latter lets CQ be the *per-edge* channel quality (paper §III-A1).
+    """
+    n, m = dist.shape
+    coverage = dist <= coverage_radius_m
+    scores = np.asarray(scores)
+    if scores.ndim == 1:
+        scores = np.broadcast_to(scores[:, None], (n, m))
+    # per-edge ranking by NO* (descending); out-of-coverage pushed to the end
+    pref = np.where(coverage, scores, -np.inf)                 # (N, M)
+    order = np.argsort(-pref, axis=0).T                        # (M, N)
+    return _resolve(order, dist, quota, coverage)
+
+
+def gcea(gains: np.ndarray, dist: np.ndarray, quota: int,
+         coverage_radius_m: float) -> np.ndarray:
+    """Greedy benchmark: rank by channel gain only."""
+    coverage = dist <= coverage_radius_m
+    pref = np.where(coverage, gains, -np.inf)                  # (N, M)
+    order = np.argsort(-pref, axis=0).T
+    return _resolve(order, dist, quota, coverage)
+
+
+def rcea(rng: np.random.Generator, dist: np.ndarray, quota: int,
+         coverage_radius_m: float) -> np.ndarray:
+    """Random benchmark."""
+    n, m = dist.shape
+    coverage = dist <= coverage_radius_m
+    pref = np.where(coverage, rng.random((n, m)), -np.inf)
+    order = np.argsort(-pref, axis=0).T
+    return _resolve(order, dist, quota, coverage)
+
+
+def associate(policy: str, *, scores: np.ndarray, gains_to_edges: np.ndarray,
+              dist: np.ndarray, quota: int, coverage_radius_m: float,
+              rng: np.random.Generator) -> np.ndarray:
+    if policy == "fcea":
+        return fcea(scores, dist, quota, coverage_radius_m)
+    if policy == "gcea":
+        # single-criterion: strongest channel to each edge
+        return gcea(gains_to_edges, dist, quota, coverage_radius_m)
+    if policy == "rcea":
+        return rcea(rng, dist, quota, coverage_radius_m)
+    raise ValueError(f"unknown association policy {policy!r}")

@@ -1,0 +1,102 @@
+"""Time/energy cost model for one HFL global round (paper Eqs. 3-5, 9-19).
+
+Vectorised over all clients and edge servers.  The client-edge association is
+a one-hot matrix ``assoc`` (N, M) with at most one 1 per row; ``z`` (M,) is
+the semi-synchronous edge-selection mask.  Everything is differentiable in
+(p, f) — which is what the DDPG agent exploits — and jittable.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import noma
+
+
+class RoundCost(NamedTuple):
+    total_time_s: jnp.ndarray        # T  (Eq. 18)
+    total_energy_j: jnp.ndarray      # E  (Eq. 19)
+    cost: jnp.ndarray                # λt·T + λe·E  (Eq. 23a)
+    per_edge_time_s: jnp.ndarray     # (M,) T_m^cloud + T^edge_{N_m}
+    per_edge_energy_j: jnp.ndarray   # (M,) E_m^cloud + E^edge_{N_m}
+    client_time_s: jnp.ndarray       # (N,) per-edge-iteration t_cmp + t_com
+    rates_bps: jnp.ndarray           # (N,) NOMA uplink rates
+
+
+def local_compute(cfg, f_hz: jnp.ndarray, n_samples: jnp.ndarray):
+    """Eqs. 4-5: per-client local training time and energy for τ₁ iterations."""
+    tau1 = cfg.tau1
+    t_cmp = tau1 * cfg.cycles_per_sample * n_samples / f_hz
+    e_cmp = tau1 * (cfg.capacitance / 2.0) * (f_hz ** 2) \
+        * cfg.cycles_per_sample * n_samples
+    return t_cmp, e_cmp
+
+
+def uplink(cfg, power_w: jnp.ndarray, gains: jnp.ndarray,
+           assoc: jnp.ndarray, *, noma_enabled: bool = True):
+    """Eqs. 7-10 per edge server: NOMA rates, then t_com / e_com per client.
+
+    gains: (N, M) channel |h|² to every edge; assoc: (N, M) one-hot.
+    ``noma_enabled=False`` models the OMA benchmark: each edge splits its
+    band B equally among its K_m clients (no interference, 1/K_m bandwidth).
+    Returns (t_com (N,), e_com (N,), rates (N,)).
+    """
+    noise = noma.noise_power_w(cfg.noise_dbm_per_hz, cfg.bandwidth_hz)
+
+    if noma_enabled:
+        def per_edge(m):
+            mask = assoc[:, m] > 0
+            return noma.achievable_rates(power_w, gains[:, m],
+                                         bandwidth_hz=cfg.bandwidth_hz,
+                                         noise_w=noise, mask=mask)
+
+        rates_all = jax.vmap(per_edge)(jnp.arange(assoc.shape[1]))  # (M, N)
+        rates = jnp.sum(rates_all.T * assoc, axis=1)                 # (N,)
+    else:
+        k_m = jnp.maximum(jnp.sum(assoc, axis=0), 1.0)               # (M,)
+        share = jnp.sum(assoc / k_m[None, :], axis=1)                # (N,)
+        own_gain = jnp.sum(gains * assoc, axis=1)
+        band = cfg.bandwidth_hz * share
+        snr = power_w * own_gain / jnp.maximum(noise * share, 1e-30)
+        rates = band * jnp.log2(1.0 + snr)
+    associated = jnp.sum(assoc, axis=1) > 0
+    safe_rates = jnp.where(associated, jnp.maximum(rates, 1.0), 1.0)
+    t_com = jnp.where(associated, cfg.model_size_bits / safe_rates, 0.0)
+    e_com = power_w * t_com
+    return t_com, e_com, rates
+
+
+def round_cost(cfg, *, power_w: jnp.ndarray, f_hz: jnp.ndarray,
+               gains: jnp.ndarray, assoc: jnp.ndarray, z: jnp.ndarray,
+               n_samples: jnp.ndarray, noma_enabled: bool = True) -> RoundCost:
+    """Full Eq. 23a cost for one global round."""
+    t_cmp, e_cmp = local_compute(cfg, f_hz, n_samples)
+    t_com, e_com, rates = uplink(cfg, power_w, gains, assoc,
+                                 noma_enabled=noma_enabled)
+    associated = jnp.sum(assoc, axis=1) > 0
+    client_time = jnp.where(associated, t_cmp + t_com, 0.0)
+    client_energy = jnp.where(associated, e_cmp + e_com, 0.0)
+
+    tau2 = cfg.tau2
+    # Eq. 13: synchronous edge round = slowest associated client, × τ₂ iters.
+    per_edge_time = tau2 * jnp.max(
+        jnp.where(assoc > 0, client_time[:, None], 0.0), axis=0)    # (M,)
+    # Eq. 14
+    per_edge_energy = tau2 * jnp.sum(
+        jnp.where(assoc > 0, client_energy[:, None], 0.0), axis=0)  # (M,)
+
+    # Eqs. 15-16: OFDMA edge->cloud
+    t_cloud = cfg.edge_model_size_bits / cfg.edge_rate_bps
+    e_cloud = cfg.edge_power_w * t_cloud
+
+    edge_total_time = per_edge_time + t_cloud
+    edge_total_energy = per_edge_energy + e_cloud
+
+    # Eqs. 18-19 with the semi-sync mask z
+    total_time = jnp.max(z * edge_total_time)
+    total_energy = jnp.sum(z * edge_total_energy)
+    cost = cfg.lambda_t * total_time + cfg.lambda_e * total_energy
+    return RoundCost(total_time, total_energy, cost, edge_total_time,
+                     edge_total_energy, client_time, rates)

@@ -1,0 +1,179 @@
+"""DDPG resource allocation (paper §IV-C, Algorithm 2) in pure JAX.
+
+Actor–critic with target networks, experience replay and soft updates
+(Lillicrap et al. [38]).  All clients form ONE agent (paper's choice): the
+state stacks every associated client's channel gain and data size, the
+action is the 2·K vector of (transmit power, CPU frequency) per client.
+
+Every update is jitted; an entire episode (env rollout + learning) can run
+inside ``lax.scan`` because the NOMA/cost environment is pure JAX too.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Networks
+# ---------------------------------------------------------------------------
+
+def _mlp_init(key, sizes) -> Params:
+    ks = jax.random.split(key, len(sizes) - 1)
+    return {f"w{i}": layers.scaled_init(ks[i], (sizes[i], sizes[i + 1]),
+                                        jnp.float32)
+            for i in range(len(sizes) - 1)} | \
+           {f"b{i}": jnp.zeros((sizes[i + 1],), jnp.float32)
+            for i in range(len(sizes) - 1)}
+
+
+def _mlp_apply(params: Params, x: jnp.ndarray, n_layers: int) -> jnp.ndarray:
+    for i in range(n_layers):
+        x = x @ params[f"w{i}"] + params[f"b{i}"]
+        if i < n_layers - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+class DDPGConfig(NamedTuple):
+    state_dim: int
+    action_dim: int
+    hidden: int = 256
+    actor_lr: float = 1e-3
+    critic_lr: float = 1e-3
+    gamma: float = 0.99          # ψ discount
+    tau: float = 0.005           # ζ soft-update speed (Eq. 40)
+    buffer_size: int = 20_000
+    batch_size: int = 64
+    noise_sigma: float = 0.1
+    noise_decay: float = 0.999
+
+
+class DDPGState(NamedTuple):
+    actor: Params
+    critic: Params
+    target_actor: Params
+    target_critic: Params
+    actor_opt: Params
+    critic_opt: Params
+    buffer: Params               # {"s","a","r","s2"} ring arrays
+    buffer_idx: jnp.ndarray
+    buffer_full: jnp.ndarray
+    noise_sigma: jnp.ndarray
+    step: jnp.ndarray
+
+
+def init_ddpg(key, cfg: DDPGConfig) -> DDPGState:
+    ka, kc = jax.random.split(key)
+    actor = _mlp_init(ka, (cfg.state_dim, cfg.hidden, cfg.hidden,
+                           cfg.action_dim))
+    critic = _mlp_init(kc, (cfg.state_dim + cfg.action_dim, cfg.hidden,
+                            cfg.hidden, 1))
+    zeros_like = lambda p: jax.tree.map(jnp.zeros_like, p)
+    buffer = {
+        "s": jnp.zeros((cfg.buffer_size, cfg.state_dim)),
+        "a": jnp.zeros((cfg.buffer_size, cfg.action_dim)),
+        "r": jnp.zeros((cfg.buffer_size,)),
+        "s2": jnp.zeros((cfg.buffer_size, cfg.state_dim)),
+    }
+    return DDPGState(actor, critic, jax.tree.map(jnp.copy, actor),
+                     jax.tree.map(jnp.copy, critic),
+                     {"m": zeros_like(actor), "v": zeros_like(actor)},
+                     {"m": zeros_like(critic), "v": zeros_like(critic)},
+                     buffer, jnp.zeros((), jnp.int32),
+                     jnp.zeros((), jnp.bool_),
+                     jnp.asarray(cfg.noise_sigma), jnp.zeros((), jnp.int32))
+
+
+def actor_apply(params: Params, state: jnp.ndarray) -> jnp.ndarray:
+    """State -> action in [0, 1]^A (env rescales to physical bounds)."""
+    return jax.nn.sigmoid(_mlp_apply(params, state, 3))
+
+
+def critic_apply(params: Params, state: jnp.ndarray, action: jnp.ndarray
+                 ) -> jnp.ndarray:
+    return _mlp_apply(params, jnp.concatenate([state, action], -1), 3)[..., 0]
+
+
+def select_action(key, ddpg: DDPGState, state: jnp.ndarray) -> jnp.ndarray:
+    """Algorithm 2 line 8: A = ν(S|θ) + exploration noise, clipped."""
+    a = actor_apply(ddpg.actor, state)
+    noise = ddpg.noise_sigma * jax.random.normal(key, a.shape)
+    return jnp.clip(a + noise, 0.0, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Replay + Adam + updates
+# ---------------------------------------------------------------------------
+
+def store(ddpg: DDPGState, cfg: DDPGConfig, s, a, r, s2) -> DDPGState:
+    i = ddpg.buffer_idx
+    buf = {
+        "s": ddpg.buffer["s"].at[i].set(s),
+        "a": ddpg.buffer["a"].at[i].set(a),
+        "r": ddpg.buffer["r"].at[i].set(r),
+        "s2": ddpg.buffer["s2"].at[i].set(s2),
+    }
+    nxt = (i + 1) % cfg.buffer_size
+    return ddpg._replace(buffer=buf, buffer_idx=nxt,
+                         buffer_full=ddpg.buffer_full | (nxt == 0))
+
+
+def _adam(params, grads, opt, lr, step, b1=0.9, b2=0.999, eps=1e-8):
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, opt["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, opt["v"], grads)
+    t = step.astype(jnp.float32) + 1.0
+    mhat = jax.tree.map(lambda x: x / (1 - b1 ** t), m)
+    vhat = jax.tree.map(lambda x: x / (1 - b2 ** t), v)
+    new = jax.tree.map(lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps),
+                       params, mhat, vhat)
+    return new, {"m": m, "v": v}
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def train_step(key, ddpg: DDPGState, cfg: DDPGConfig) -> Tuple[DDPGState, Dict]:
+    """One mini-batch update of critic (Eq. 38) + actor (Eq. 39) + targets (Eq. 40)."""
+    size = jnp.where(ddpg.buffer_full, cfg.buffer_size, ddpg.buffer_idx)
+    size = jnp.maximum(size, 1)
+    idx = jax.random.randint(key, (cfg.batch_size,), 0, size)
+    s = ddpg.buffer["s"][idx]
+    a = ddpg.buffer["a"][idx]
+    r = ddpg.buffer["r"][idx]
+    s2 = ddpg.buffer["s2"][idx]
+
+    # y_j = R_j + ψ Q'(S_{j+1}, ν'(S_{j+1}))
+    a2 = actor_apply(ddpg.target_actor, s2)
+    y = r + cfg.gamma * critic_apply(ddpg.target_critic, s2, a2)
+
+    def critic_loss(cp):
+        q = critic_apply(cp, s, a)
+        return jnp.mean((y - q) ** 2)
+
+    cl, cg = jax.value_and_grad(critic_loss)(ddpg.critic)
+    critic, critic_opt = _adam(ddpg.critic, cg, ddpg.critic_opt,
+                               cfg.critic_lr, ddpg.step)
+
+    def actor_loss(ap):
+        return -jnp.mean(critic_apply(critic, s, actor_apply(ap, s)))
+
+    al, ag = jax.value_and_grad(actor_loss)(ddpg.actor)
+    actor, actor_opt = _adam(ddpg.actor, ag, ddpg.actor_opt,
+                             cfg.actor_lr, ddpg.step)
+
+    soft = lambda t, o: jax.tree.map(
+        lambda tt, oo: (1 - cfg.tau) * tt + cfg.tau * oo, t, o)
+    new = ddpg._replace(
+        actor=actor, critic=critic,
+        target_actor=soft(ddpg.target_actor, actor),
+        target_critic=soft(ddpg.target_critic, critic),
+        actor_opt=actor_opt, critic_opt=critic_opt,
+        noise_sigma=ddpg.noise_sigma * cfg.noise_decay,
+        step=ddpg.step + 1)
+    return new, {"critic_loss": cl, "actor_loss": al}

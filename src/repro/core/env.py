@@ -1,0 +1,136 @@
+"""NOMA-HFL resource-allocation environment (the MDP of paper §IV-C).
+
+State  S_j = {h_{n,m}^j, D_n} for the associated clients (paper's state space)
+Action A_j = {p_n^j, f_n^j}    per associated client, continuous in [0,1]²
+Reward R_j = −(λt·T + λe·E)    (Eq. 37)
+
+The channel follows first-order Gauss-Markov fading between slots, giving the
+time-varying environment the paper motivates DDPG with.  The whole env is
+pure JAX: an episode is a single ``lax.scan``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cost, noma
+
+
+class EnvState(NamedTuple):
+    gains: jnp.ndarray       # (N, M) current |h|²
+    key: jnp.ndarray
+
+
+class NomaHflEnv:
+    """Environment over a FIXED association (one scheduling epoch)."""
+
+    def __init__(self, cfg, assoc: jnp.ndarray, z: jnp.ndarray,
+                 dist: jnp.ndarray, n_samples: jnp.ndarray,
+                 fading_rho: float = 0.9):
+        self.cfg = cfg
+        self.assoc = assoc                   # (N, M) one-hot
+        self.z = z                           # (M,)
+        self.dist = dist                     # (N, M)
+        self.n_samples = n_samples           # (N,)
+        self.rho = fading_rho
+        self.n_clients = assoc.shape[0]
+        self.associated = jnp.sum(assoc, axis=1) > 0
+        # state: per-client (gain to own edge, data size), flattened
+        self.state_dim = 2 * self.n_clients
+        self.action_dim = 2 * self.n_clients
+
+    # -- helpers ---------------------------------------------------------------
+
+    def _observe(self, gains: jnp.ndarray) -> jnp.ndarray:
+        own_gain = jnp.sum(gains * self.assoc, axis=1)          # (N,)
+        g = jnp.log10(jnp.maximum(own_gain, 1e-20)) / 10.0 + 1.0
+        d = self.n_samples / jnp.maximum(jnp.max(self.n_samples), 1.0)
+        return jnp.concatenate([jnp.where(self.associated, g, 0.0),
+                                jnp.where(self.associated, d, 0.0)])
+
+    def decode_action(self, action: jnp.ndarray
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """[0,1]^{2N} -> (p (N,) W, f (N,) Hz) within paper Table II bounds."""
+        cfg = self.cfg
+        a = action.reshape(2, self.n_clients)
+        p = cfg.p_min_w + a[0] * (cfg.p_max_w - cfg.p_min_w)
+        f = cfg.f_min_hz + a[1] * (cfg.f_max_hz - cfg.f_min_hz)
+        return p, f
+
+    # -- gym-like API ------------------------------------------------------------
+
+    def reset(self, key) -> Tuple[EnvState, jnp.ndarray]:
+        k1, k2 = jax.random.split(key)
+        gains = noma.rayleigh_gains(
+            k1, self.dist, path_loss_exponent=self.cfg.path_loss_exponent)
+        state = EnvState(gains, k2)
+        return state, self._observe(gains)
+
+    def step(self, state: EnvState, action: jnp.ndarray
+             ) -> Tuple[EnvState, jnp.ndarray, jnp.ndarray, cost.RoundCost]:
+        p, f = self.decode_action(action)
+        rc = cost.round_cost(self.cfg, power_w=p, f_hz=f, gains=state.gains,
+                             assoc=self.assoc, z=self.z,
+                             n_samples=self.n_samples)
+        reward = -rc.cost                                        # Eq. 37
+        k1, k2 = jax.random.split(state.key)
+        gains = noma.evolve_gains(
+            k1, state.gains, self.dist,
+            path_loss_exponent=self.cfg.path_loss_exponent, rho=self.rho)
+        new_state = EnvState(gains, k2)
+        return new_state, self._observe(gains), reward, rc
+
+
+# ---------------------------------------------------------------------------
+# Baseline allocators (paper §V-D benchmarks)
+# ---------------------------------------------------------------------------
+
+def rra_action(key, n_clients: int) -> jnp.ndarray:
+    """Random resource allocation."""
+    return jax.random.uniform(key, (2 * n_clients,))
+
+
+def _grid_best(e: "NomaHflEnv", gains: jnp.ndarray, fixed_axis: int,
+               fixed_frac: float = 0.5, n_grid: int = 16) -> jnp.ndarray:
+    """Grid-optimise the free (shared) fraction while the other axis is
+    fixed — the paper's FPA/FCA benchmarks optimise their free variable
+    'in the same way as DDPG-RA' (§V-D); a 1-D grid is the stand-in."""
+    n = e.n_clients
+    fracs = jnp.linspace(0.0, 1.0, n_grid)
+
+    def cost_of(frac):
+        a = jnp.full((2, n), fixed_frac).at[1 - fixed_axis].set(frac) \
+            .reshape(-1)
+        p, f = e.decode_action(a)
+        rc = cost.round_cost(e.cfg, power_w=p, f_hz=f, gains=gains,
+                             assoc=e.assoc, z=e.z, n_samples=e.n_samples)
+        return rc.cost
+
+    costs = jax.vmap(cost_of)(fracs)
+    best = fracs[jnp.argmin(costs)]
+    a = jnp.full((2, n), fixed_frac).at[1 - fixed_axis].set(best)
+    return a.reshape(-1)
+
+
+def fpa_best_action(e: "NomaHflEnv", gains: jnp.ndarray) -> jnp.ndarray:
+    """Fixed power at p_max (the conventional FPA choice [18]);
+    grid-optimised shared CPU frequency."""
+    return _grid_best(e, gains, fixed_axis=0, fixed_frac=1.0)
+
+
+def fca_best_action(e: "NomaHflEnv", gains: jnp.ndarray) -> jnp.ndarray:
+    """Fixed CPU frequency at f_max (the conventional FCA choice [19]);
+    grid-optimised shared power."""
+    return _grid_best(e, gains, fixed_axis=1, fixed_frac=1.0)
+
+
+def fpa_action(n_clients: int, f_frac: jnp.ndarray) -> jnp.ndarray:
+    """Fixed power (midpoint), computation frequency from ``f_frac``."""
+    return jnp.concatenate([jnp.full((n_clients,), 0.5), f_frac])
+
+
+def fca_action(n_clients: int, p_frac: jnp.ndarray) -> jnp.ndarray:
+    """Fixed computation (midpoint), power from ``p_frac``."""
+    return jnp.concatenate([p_frac, jnp.full((n_clients,), 0.5)])

@@ -1,0 +1,121 @@
+"""Fuzzy-logic client competency scoring (paper §III).
+
+Three normalised inputs in [0, 100] — channel quality (CQ), data quantity
+(DQ), model staleness (MS) — pass through triangular membership functions
+(paper Fig. 4), the 27-rule Mamdani table (paper Table I) with Max–Min
+inference, and centre-of-gravity defuzzification (Eq. 22).  The output
+NO* ∈ [0, 100] is the client's competency level for client-edge association.
+
+Everything is pure jnp and vmappable over clients; the whole scoring of N
+clients fuses into one XLA program.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Fuzzy set indices
+WEAK, MEDIUM, STRONG = 0, 1, 2                 # CQ
+SHORTAGE, AVERAGE_DQ, SUFFICIENT = 0, 1, 2     # DQ
+FRESH, MEDIUM_MS, STALE = 0, 1, 2              # MS
+POOR, FAIR, AVG, GOOD, EXCELLENT = 0, 1, 2, 3, 4
+
+# Paper Table I: RULES[cq, dq, ms] -> output set index.
+RULES = jnp.array([
+    # CQ = weak (rules 19-27)
+    [[POOR, POOR, FAIR],        # DQ shortage: MS fresh/medium/stale
+     [POOR, FAIR, AVG],         # DQ average
+     [FAIR, AVG, GOOD]],        # DQ sufficient
+    # CQ = medium (rules 10-18)
+    [[POOR, FAIR, AVG],
+     [FAIR, AVG, GOOD],
+     [AVG, GOOD, EXCELLENT]],
+    # CQ = strong (rules 1-9)
+    [[FAIR, AVG, GOOD],
+     [AVG, GOOD, EXCELLENT],
+     [GOOD, EXCELLENT, EXCELLENT]],
+], dtype=jnp.int32)
+
+# Triangular membership (a, b, c): peak at b, support [a, c].
+_IN_TRIS = jnp.array([      # the three input sets share one geometry
+    [-50.0, 0.0, 50.0],     # weak / shortage / fresh
+    [0.0, 50.0, 100.0],     # medium / average / medium
+    [50.0, 100.0, 150.0],   # strong / sufficient / stale
+])
+
+_OUT_TRIS = jnp.array([
+    [-25.0, 0.0, 25.0],     # poor
+    [0.0, 25.0, 50.0],      # fair
+    [25.0, 50.0, 75.0],     # average
+    [50.0, 75.0, 100.0],    # good
+    [75.0, 100.0, 125.0],   # excellent
+])
+
+_COG_GRID = jnp.linspace(0.0, 100.0, 201)
+
+
+def tri(x: jnp.ndarray, abc: jnp.ndarray) -> jnp.ndarray:
+    """Triangular membership value(s); broadcasts x against abc rows."""
+    a, b, c = abc[..., 0], abc[..., 1], abc[..., 2]
+    up = (x - a) / jnp.maximum(b - a, 1e-9)
+    down = (c - x) / jnp.maximum(c - b, 1e-9)
+    return jnp.clip(jnp.minimum(up, down), 0.0, 1.0)
+
+
+def input_memberships(v: jnp.ndarray) -> jnp.ndarray:
+    """Scalar normalised input -> membership degrees over the 3 input sets."""
+    return tri(v[..., None], _IN_TRIS)
+
+
+def normalize(v: jnp.ndarray, max_value: float) -> jnp.ndarray:
+    """Paper Eq. (21): NV = V / MV × 100%."""
+    return jnp.clip(v / jnp.maximum(max_value, 1e-12), 0.0, 1.0) * 100.0
+
+
+def rule_strengths(cq: jnp.ndarray, dq: jnp.ndarray, ms: jnp.ndarray
+                   ) -> jnp.ndarray:
+    """Max–Min inference: per-output-set firing strength, shape (5,).
+
+    Rule degree = min of the three memberships (paper's Min); when several
+    rules map to the same output set, the strongest wins (paper's Max).
+    """
+    m_cq = input_memberships(cq)          # (3,)
+    m_dq = input_memberships(dq)
+    m_ms = input_memberships(ms)
+    # (3,3,3) rule firing degrees
+    deg = jnp.minimum(jnp.minimum(m_cq[:, None, None], m_dq[None, :, None]),
+                      m_ms[None, None, :])
+    out = jnp.zeros((5,))
+    out = out.at[RULES.reshape(-1)].max(deg.reshape(-1))
+    return out
+
+
+def defuzzify_cog(strengths: jnp.ndarray) -> jnp.ndarray:
+    """Mamdani clip + aggregate + COG over the output domain (Eq. 22)."""
+    mu_out = tri(_COG_GRID[:, None], _OUT_TRIS[None, :, :])   # (G, 5)
+    clipped = jnp.minimum(mu_out, strengths[None, :])
+    agg = jnp.max(clipped, axis=-1)                           # (G,)
+    num = jnp.sum(_COG_GRID * agg)
+    den = jnp.maximum(jnp.sum(agg), 1e-9)
+    return num / den
+
+
+def fuzzy_score(cq: jnp.ndarray, dq: jnp.ndarray, ms: jnp.ndarray
+                ) -> jnp.ndarray:
+    """Normalised inputs in [0,100] -> competency NO* in [0,100]."""
+    return defuzzify_cog(rule_strengths(cq, dq, ms))
+
+
+# Vectorised over clients: (N,), (N,), (N,) -> (N,)
+fuzzy_scores = jax.jit(jax.vmap(fuzzy_score))
+
+
+def score_clients(channel_gain: jnp.ndarray, data_quantity: jnp.ndarray,
+                  staleness: jnp.ndarray, *, gain_max: float | jnp.ndarray,
+                  data_max: float | jnp.ndarray,
+                  staleness_max: float | jnp.ndarray) -> jnp.ndarray:
+    """End-to-end: raw per-client criteria -> NO* scores (N,)."""
+    cq = normalize(channel_gain, gain_max)
+    dq = normalize(data_quantity, data_max)
+    ms = normalize(staleness, staleness_max)
+    return fuzzy_scores(cq, dq, ms)

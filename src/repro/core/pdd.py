@@ -1,0 +1,112 @@
+"""Penalty-dual-decomposition edge-server scheduling (paper §IV-B, Alg. 1).
+
+Solves problem (24): min over z ∈ {0,1}^M of  λt·W + λe·Σ z_m E_m  with
+W = max_m z_m (T_m^cloud + U), using the paper's double loop:
+
+* inner loop — block-coordinate closed forms: z̃* (Eqs. 26-27), z* (Lemma 1 /
+  Eq. 29), U*, W* (Eqs. 32-33), plus a projected-subgradient step on the
+  multiplier γ_m of constraint (28b);
+* outer loop — dual updates (Eqs. 34-35) and penalty shrink v ← c·v.
+
+One documented deviation (DESIGN.md §3): the paper's objective admits the
+degenerate z = 0 (select nothing, pay nothing).  Its semi-synchronous
+mechanism in fact requires M_c edge servers per cloud round (§II-B2), so we
+add the quota Σ z_m = M_c as one more penalised equality with its own dual
+variable — squarely inside the PDD framework.  Setting ``quota=None``
+recovers the paper's literal formulation.
+
+All updates are pure jnp and the whole solver is jittable (lax.fori_loop).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class PDDResult(NamedTuple):
+    z: jnp.ndarray             # (M,) relaxed solution in [0, 1]
+    z_binary: jnp.ndarray      # (M,) rounded {0, 1}
+    objective: jnp.ndarray     # λt·W + λe·Σ z E at the binary point
+    W: jnp.ndarray
+    residual: jnp.ndarray      # max |z - z̃| + |z(1-z̃)| (PDD feasibility)
+    iterations: jnp.ndarray
+
+
+def _objective(z, U, edge_energy, t_cloud, lam_t, lam_e):
+    W = jnp.max(z * (t_cloud + U))
+    return lam_t * W + lam_e * jnp.sum(z * edge_energy)
+
+
+@functools.partial(jax.jit, static_argnames=("outer_iters", "inner_iters",
+                                             "quota"))
+def pdd_schedule(edge_energy: jnp.ndarray, t_cloud: jnp.ndarray,
+                 U: jnp.ndarray, *, lam_t: float, lam_e: float,
+                 quota: Optional[int] = None,
+                 outer_iters: int = 30, inner_iters: int = 40,
+                 v0: float = 1.0, v_shrink: float = 0.8) -> PDDResult:
+    """edge_energy (M,) = E_m^cloud + E^edge; t_cloud (M,); U scalar (Eq. 32)."""
+    m = edge_energy.shape[0]
+    tu = t_cloud + U
+
+    def inner_body(_, state):
+        z, zt, q, qt, gamma, mu, W, v = state
+        # --- z̃ update, Eqs. 26-27 (closed form, then clip) ----------------
+        zt_u = (z ** 2 + q * z * v + z + qt * v) / (z ** 2 + 1.0)
+        zt = jnp.clip(zt_u, 0.0, 1.0)
+        # --- z update, Lemma 1 / Eq. 29 ------------------------------------
+        I_m = (zt / v - qt - q * (1.0 - zt)
+               - lam_e * edge_energy - gamma * tu)
+        if quota is not None:
+            # quota equality Σz = M_c enters the AL: + (Σz - Mc + v·mu)²/(2v)
+            I_m = I_m - mu - (jnp.sum(z) - quota) / v
+        z = jnp.clip(I_m * v / (1.0 + (1.0 - zt) ** 2), 0.0, 1.0)
+        # --- W update, Eq. 33 ------------------------------------------------
+        W = jnp.max(z * tu)
+        # --- γ projected subgradient on constraint (28b) ---------------------
+        gamma = jnp.maximum(0.0, gamma + (z * tu - W) / jnp.maximum(v, 1e-6)
+                            * 0.1)
+        return z, zt, q, qt, gamma, mu, W, v
+
+    def outer_body(_, state):
+        z, zt, q, qt, gamma, mu, W, v = state
+        state = jax.lax.fori_loop(0, inner_iters, inner_body, state)
+        z, zt, q, qt, gamma, mu, W, v = state
+        # --- dual updates, Eqs. 34-35 ---------------------------------------
+        q = q + (z * (1.0 - zt)) / v
+        qt = qt + (z - zt) / v
+        if quota is not None:
+            mu = mu + (jnp.sum(z) - quota) / v
+        v = v * v_shrink
+        return z, zt, q, qt, gamma, mu, W, v
+
+    z0 = jnp.full((m,), 0.5)
+    state = (z0, z0, jnp.zeros(m), jnp.zeros(m), jnp.zeros(m),
+             jnp.zeros(()), jnp.max(tu), jnp.asarray(v0))
+    state = jax.lax.fori_loop(0, outer_iters, outer_body, state)
+    z, zt, q, qt, gamma, mu, W, v = state
+
+    if quota is not None:
+        # deterministic rounding to exactly M_c servers (largest z first)
+        thresh = jnp.sort(z)[m - quota]
+        z_bin = (z >= thresh).astype(jnp.float32)
+        # tie-break: keep exactly `quota`
+        excess = jnp.cumsum(z_bin) > quota
+        z_bin = jnp.where(excess, 0.0, z_bin)
+    else:
+        z_bin = (z > 0.5).astype(jnp.float32)
+
+    residual = jnp.max(jnp.abs(z - zt)) + jnp.max(jnp.abs(z * (1.0 - zt)))
+    obj = _objective(z_bin, U, edge_energy, t_cloud, lam_t, lam_e)
+    return PDDResult(z, z_bin, obj, jnp.max(z_bin * tu), residual,
+                     jnp.asarray(outer_iters * inner_iters))
+
+
+def semi_sync_fastest(per_edge_time: jnp.ndarray, quota: int) -> jnp.ndarray:
+    """Paper §II-B2 baseline selector: the M_c fastest edge servers."""
+    m = per_edge_time.shape[0]
+    order = jnp.argsort(per_edge_time)
+    z = jnp.zeros((m,)).at[order[:quota]].set(1.0)
+    return z

@@ -1,0 +1,17 @@
+"""Model staleness tracking (paper Eq. 20).
+
+A_n^i = A_n^{i-1} + 1 if client n was not orchestrated at round i-1, else 1.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def update_staleness(staleness: jnp.ndarray, selected: jnp.ndarray
+                     ) -> jnp.ndarray:
+    """staleness (N,) int; selected (N,) bool — selected clients reset to 1."""
+    return jnp.where(selected, 1, staleness + 1)
+
+
+def init_staleness(n_clients: int) -> jnp.ndarray:
+    return jnp.ones((n_clients,), jnp.int32)

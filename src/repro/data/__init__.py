@@ -1,0 +1,1 @@
+"""Data substrate: synthetic datasets, federated partitioning, token streams."""

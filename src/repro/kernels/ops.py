@@ -1,0 +1,68 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+The model code uses (B, S, H, D) activations; the kernels use head-major
+(B, H, S, D).  On CPU (this container) the wrappers run the kernels in
+interpret mode automatically; on TPU they compile for real.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import linear_recurrence as _lr
+from repro.kernels import ref as _ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int = 0, block_q: int = 128,
+                    block_k: int = 256,
+                    interpret: bool | None = None) -> jnp.ndarray:
+    """q (B, S, H, D), k/v (B, S, KV, D) -> (B, S, H, D).
+
+    Differentiable: the forward runs the Pallas kernel; the backward is a
+    recompute against the jnp oracle (`custom_vjp`) — the same O(S·D) HBM
+    class as a dedicated flash backward kernel, traded for simplicity.
+    """
+    interp = _on_cpu() if interpret is None else interpret
+
+    def oracle(qt, kt, vt):
+        return _ref.attention_ref(qt, kt, vt, causal=causal, window=window)
+
+    @jax.custom_vjp
+    def fa(qt, kt, vt):
+        return _fa.flash_attention(qt, kt, vt, causal=causal, window=window,
+                                   block_q=block_q, block_k=block_k,
+                                   interpret=interp)
+
+    def fwd(qt, kt, vt):
+        return fa(qt, kt, vt), (qt, kt, vt)
+
+    def bwd(res, g):
+        _, vjp = jax.vjp(oracle, *res)
+        return vjp(g)
+
+    fa.defvjp(fwd, bwd)
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    return fa(qt, kt, vt).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_c",
+                                             "interpret"))
+def linear_recurrence(log_a: jnp.ndarray, x: jnp.ndarray, *,
+                      block_t: int = 256, block_c: int = 128,
+                      interpret: bool | None = None) -> jnp.ndarray:
+    """log_a, x (B, S, C) -> (B, S, C) fp32."""
+    interp = _on_cpu() if interpret is None else interpret
+    return _lr.linear_recurrence(log_a, x, block_t=block_t, block_c=block_c,
+                                 interpret=interp)

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+These are deliberately naive — full score matrices, `associative_scan` — so
+a kernel bug cannot hide behind a shared implementation trick.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, window: int = 0) -> jnp.ndarray:
+    """q (B, H, S, D); k/v (B, KV, S, D) -> (B, H, S, D).  GQA broadcast."""
+    b, h, s, d = q.shape
+    kv = k.shape[1]
+    group = h // kv
+    qg = q.reshape(b, kv, group, s, d)
+    logits = jnp.einsum("bkgqd,bksd->bkgqs", qg * d ** -0.5,
+                        k.astype(q.dtype)).astype(jnp.float32)
+    qp = jnp.arange(s)[:, None]
+    kp = jnp.arange(s)[None, :]
+    allowed = jnp.ones((s, s), bool)
+    if causal:
+        allowed &= kp <= qp
+    if window:
+        allowed &= kp > qp - window
+    logits = jnp.where(allowed, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", probs, v)
+    return out.reshape(b, h, s, d)
+
+
+def linear_recurrence_ref(log_a: jnp.ndarray, x: jnp.ndarray,
+                          h0: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """h_t = exp(log_a_t)·h_{t-1} + x_t along axis 1.  (B, S, C) fp32."""
+    x = x.astype(jnp.float32)
+    log_a = log_a.astype(jnp.float32)
+    if h0 is not None:
+        x = x.at[:, 0].add(jnp.exp(log_a[:, 0]) * h0.astype(jnp.float32))
+
+    def combine(left, right):
+        la, xa = left
+        lb, xb = right
+        return la + lb, jnp.exp(lb) * xa + xb
+
+    _, h = jax.lax.associative_scan(combine, (log_a, x), axis=1)
+    return h

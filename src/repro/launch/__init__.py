@@ -1,0 +1,1 @@
+"""Launcher: production mesh, train/serve steps, multi-pod dry-run, roofline."""

@@ -1,0 +1,173 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: prove every (architecture × input shape × mesh)
+# combination lowers AND compiles under the production sharding config.
+#
+# The two lines above run before ANY other import (jax locks the device
+# count on first init).  The dry-run lowers against ShapeDtypeStructs only —
+# no device memory is ever allocated.
+#
+# Usage:
+#  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+#  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--json out]
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ASSIGNED, INPUT_SHAPES, get_config, input_specs
+from repro.configs.base import shape_applicable
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import make_prefill_step, make_serve_step, \
+    make_train_step
+from repro.sharding import input_shardings, param_shardings
+
+
+def lower_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
+               compile_: bool = True, cfg_override=None,
+               unroll: bool = False, donate: bool = True) -> Dict[str, Any]:
+    """Lower + compile one (arch × shape × mesh); return the record dict.
+
+    ``unroll=True`` lowers with ``scan_layers=False`` so XLA's cost analysis
+    counts every layer (while-loop bodies are otherwise visited once) — the
+    roofline accounting mode.  The scanned variant stays the memory/compile
+    proof.
+    """
+    cfg = cfg_override if cfg_override is not None else get_config(arch)
+    if unroll:
+        cfg = cfg.replace(scan_layers=False)
+    shape = INPUT_SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = 512 if multi_pod else 256
+    t0 = time.time()
+
+    specs = input_specs(cfg, shape)
+    in_sh = input_shardings(specs, mesh, shape.global_batch)
+
+    with mesh:
+        if shape.kind == "train":
+            step_fn, model, _ = make_train_step(cfg)
+            p_shapes = jax.eval_shape(model.init, jax.random.key(0))
+            p_sh = param_shardings(p_shapes, mesh)
+            o_shapes = {"m": p_shapes, "v": p_shapes}
+            o_sh = {"m": p_sh, "v": p_sh}
+            s_sds = jax.ShapeDtypeStruct((), jnp.int32)
+            fn = jax.jit(
+                step_fn,
+                in_shardings=(p_sh, o_sh, None, in_sh),
+                out_shardings=(p_sh, o_sh, None, None),
+                donate_argnums=(0, 1) if donate else ())
+            lowered = fn.lower(p_shapes, o_shapes, s_sds, specs)
+        elif shape.kind == "prefill":
+            step_fn, model = make_prefill_step(cfg)
+            p_shapes = jax.eval_shape(model.init, jax.random.key(0))
+            p_sh = param_shardings(p_shapes, mesh)
+            fn = jax.jit(step_fn, in_shardings=(p_sh, in_sh))
+            lowered = fn.lower(p_shapes, specs)
+        else:  # decode
+            step_fn, model = make_serve_step(cfg)
+            p_shapes = jax.eval_shape(model.init, jax.random.key(0))
+            p_sh = param_shardings(p_shapes, mesh)
+            fn = jax.jit(
+                step_fn,
+                in_shardings=(p_sh, in_sh["token"], in_sh["cache"],
+                              in_sh["index"]),
+                out_shardings=(in_sh["token"], in_sh["cache"]),
+                donate_argnums=(2,) if donate else ())
+            lowered = fn.lower(p_shapes, specs["token"], specs["cache"],
+                               specs["index"])
+
+        t_lower = time.time() - t0
+        rec: Dict[str, Any] = {
+            "arch": arch, "shape": shape_name, "mesh": mesh_name,
+            "status": "lowered", "lower_s": round(t_lower, 1),
+        }
+        if not compile_:
+            return rec
+        compiled = lowered.compile()
+        rec["status"] = "compiled"
+        rec["compile_s"] = round(time.time() - t0 - t_lower, 1)
+
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_gb": mem.argument_size_in_bytes / 1e9,
+            "output_gb": mem.output_size_in_bytes / 1e9,
+            "temp_gb": mem.temp_size_in_bytes / 1e9,
+            "generated_code_gb": mem.generated_code_size_in_bytes / 1e9,
+        }
+        roof = rl.analyze(
+            compiled, arch=arch, shape=shape_name, mesh_name=mesh_name,
+            chips=chips, model_flops=rl.model_flops_estimate(cfg, shape))
+        rec["roofline"] = {
+            "flops_per_device": roof.flops_per_device,
+            "bytes_per_device": roof.bytes_per_device,
+            "coll_bytes_per_device": roof.coll_bytes_per_device,
+            "coll_breakdown": {k: v for k, v in roof.coll_breakdown.items()
+                               if v},
+            "compute_s": roof.compute_s,
+            "memory_s": roof.memory_s,
+            "collective_s": roof.collective_s,
+            "dominant": roof.dominant,
+            "model_flops": roof.model_flops,
+            "useful_ratio": roof.useful_ratio,
+        }
+        return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--no-compile", action="store_true")
+    ap.add_argument("--unroll", action="store_true",
+                    help="roofline accounting mode (scan_layers=False)")
+    ap.add_argument("--json", default=None, help="append records to file")
+    args = ap.parse_args(argv)
+
+    pairs = []
+    if args.all:
+        for a in ASSIGNED:
+            for s in INPUT_SHAPES:
+                pairs.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        pairs.append((args.arch, args.shape))
+
+    records = []
+    failed = 0
+    for arch, shape in pairs:
+        try:
+            rec = lower_pair(arch, shape, multi_pod=args.multi_pod,
+                             compile_=not args.no_compile,
+                             unroll=args.unroll)
+        except Exception as e:  # a dry-run failure is a bug in the system
+            traceback.print_exc()
+            rec = {"arch": arch, "shape": shape, "status": "FAILED",
+                   "error": repr(e)[:500]}
+            failed += 1
+        records.append(rec)
+        print(json.dumps(rec), flush=True)
+        if args.json:
+            with open(args.json, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,79 @@
+"""Batched decode server simulation for any assigned architecture.
+
+Prefill a batch of prompts (reduced config), then autoregressively decode
+with the same ``serve_step`` the decode-shape dry-runs lower at full scale.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --tokens 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.steps import make_serve_step
+
+
+def prefill_into_cache(model, cfg, params, tokens, cache):
+    """Feed prompt tokens one step at a time (functional reference prefill)."""
+    serve = jax.jit(lambda p, t, c, i: model.decode_step(
+        p, t, c, i, prefix_len=cfg.prefix_tokens))
+    logits = None
+    for i in range(tokens.shape[1]):
+        logits, cache = serve(params, tokens[:, i:i + 1], cache,
+                              jnp.asarray(i, jnp.int32))
+    return logits, cache
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--cache-len", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch).reduced()
+    serve_step, model = make_serve_step(cfg)
+    serve_step = jax.jit(serve_step, donate_argnums=(2,))
+
+    key = jax.random.key(args.seed)
+    params = model.init(key)
+    if cfg.encoder_layers:
+        cache = model.init_cache(args.batch, args.cache_len, cfg.stub_frames)
+        key, k = jax.random.split(key)
+        frames = jax.random.normal(
+            k, (args.batch, cfg.stub_frames, cfg.d_model), cfg.compute_dtype)
+        cache = model.prefill_cross(params, cache, frames)
+    else:
+        cache = model.init_cache(args.batch, args.cache_len)
+
+    key, k = jax.random.split(key)
+    prompt = jax.random.randint(k, (args.batch, args.prompt_len), 0,
+                                cfg.vocab_size, jnp.int32)
+    _, cache = prefill_into_cache(model, cfg, params, prompt, cache)
+
+    tok = prompt[:, -1:]
+    out = []
+    t0 = time.time()
+    for i in range(args.tokens):
+        idx = jnp.asarray(args.prompt_len + i, jnp.int32)
+        tok, cache = serve_step(params, tok, cache, idx)
+        out.append(np.asarray(tok[:, 0]))
+    dt = time.time() - t0
+    gen = np.stack(out, axis=1)
+    print(f"arch={cfg.name} batch={args.batch} generated {gen.shape[1]} "
+          f"tokens/seq in {dt:.2f}s ({args.tokens*args.batch/dt:.1f} tok/s)")
+    print("sample:", gen[0][:16])
+    assert np.isfinite(gen).all()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,101 @@
+"""Jittable train/prefill/serve steps shared by the dry-run, the roofline
+harness, the examples and the tests.
+
+``make_train_step`` closes over (model, optimizer); its signature is
+  (params, opt_state, step, batch) -> (params, opt_state, step, metrics)
+``make_serve_step`` is the decode step the ``decode_32k``/``long_500k``
+shapes lower: ONE new token against a KV cache of ``seq_len``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import build_model
+from repro.models.transformer import loss_fn as _tf_loss
+from repro.optim import adamw, clip_by_global_norm
+
+Params = Any
+
+
+def model_loss(model, params: Params, batch: Dict[str, jnp.ndarray]
+               ) -> jnp.ndarray:
+    cfg = model.cfg
+    logits, aux = model.apply(params, batch["tokens"],
+                              extra_embeddings=batch.get("embeddings"))
+    from repro.models import layers
+    loss = layers.softmax_cross_entropy(logits, batch["labels"],
+                                        batch.get("loss_mask"))
+    if cfg.moe_experts:
+        loss = loss + cfg.moe_aux_weight * aux
+    return loss
+
+
+def make_train_step(cfg, *, lr: float = 3e-4, grad_clip: float = 1.0
+                    ) -> Callable:
+    model = build_model(cfg)
+    opt = adamw(lr, opt_dtype=cfg.opt_dtype_str)
+
+    def train_step(params, opt_state, step, batch):
+        microbatches = cfg.grad_accum
+
+        def compute(p, b):
+            return model_loss(model, p, b)
+
+        if microbatches > 1:
+            b0 = batch["tokens"].shape[0]
+            mb = b0 // microbatches
+
+            def split(x):
+                return x.reshape((microbatches, mb) + x.shape[1:])
+
+            mbatch = {k: split(v) for k, v in batch.items()}
+
+            def body(carry, mbat):
+                loss_acc, grad_acc = carry
+                loss, grads = jax.value_and_grad(compute)(params, mbat)
+                return (loss_acc + loss,
+                        jax.tree.map(jnp.add, grad_acc, grads)), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                body, (jnp.zeros(()), zeros), mbatch)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        else:
+            loss, grads = jax.value_and_grad(compute)(params, batch)
+
+        grads = clip_by_global_norm(grads, grad_clip)
+        params, opt_state = opt.update(grads, opt_state, params, step)
+        return params, opt_state, step + 1, {"loss": loss}
+
+    return train_step, model, opt
+
+
+def make_prefill_step(cfg) -> Tuple[Callable, Any]:
+    model = build_model(cfg)
+
+    def prefill_step(params, batch):
+        logits, _ = model.apply(params, batch["tokens"],
+                                extra_embeddings=batch.get("embeddings"))
+        # return only the last-position logits (what a server samples from)
+        return logits[:, -1, :]
+
+    return prefill_step, model
+
+
+def make_serve_step(cfg) -> Tuple[Callable, Any]:
+    model = build_model(cfg)
+    prefix = cfg.prefix_tokens
+
+    def serve_step(params, token, cache, index):
+        logits, cache = model.decode_step(params, token, cache, index,
+                                          prefix_len=prefix)
+        next_token = jnp.argmax(logits[:, -1, :], axis=-1, keepdims=True)
+        return next_token.astype(jnp.int32), cache
+
+    return serve_step, model

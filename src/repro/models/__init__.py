@@ -1,0 +1,12 @@
+"""Model zoo: block-assembly transformer family + enc-dec + the paper's MLP."""
+from __future__ import annotations
+
+
+def build_model(cfg):
+    """Return the model object (init/apply/init_cache/decode_step) for a config."""
+    from repro.models.encdec import EncDecTransformer
+    from repro.models.transformer import Transformer
+
+    if cfg.encoder_layers > 0:
+        return EncDecTransformer(cfg)
+    return Transformer(cfg)

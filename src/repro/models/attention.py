@@ -1,0 +1,297 @@
+"""Attention layer supporting every assigned architecture.
+
+Features: grouped-query attention (any ``n_kv_heads`` dividing ``n_heads``,
+including MQA), optional QKV bias (qwen1.5), per-head q/k RMSNorm (qwen3),
+RoPE or NoPE (llama4 global layers), and three mask families:
+
+* ``global``   — causal full attention,
+* ``sliding``  — causal sliding-window of width ``window`` (recurrentgemma,
+                 beyond-paper dense serve variant),
+* ``chunked``  — llama4-style chunked local attention (attend within the own
+                 chunk only, causally),
+* ``prefix``   — prefix-LM mask (paligemma: bidirectional over the multimodal
+                 prefix, causal afterwards).
+
+Long sequences use a query-chunked formulation (``lax.scan`` over query
+blocks) so the (S, S) score matrix is never materialised — the XLA analogue
+of flash attention; the Pallas kernel in :mod:`repro.kernels.flash_attention`
+is the TPU hot-spot implementation validated against the same oracle.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+Params = Dict[str, Any]
+
+NEG_INF = -2.0e38
+
+# Query-chunk size used when S exceeds the chunking threshold.
+_Q_CHUNK = 1024
+_CHUNK_THRESHOLD = 2048
+
+
+def _constrain(x, spec_dims):
+    """Best-effort with_sharding_constraint: no-op without an ambient mesh.
+
+    Used for context parallelism (``cfg.attn_seq_shard``): architectures
+    whose head count does not divide the ``model`` mesh axis (yi-34b: 56,
+    whisper: 20) shard the attention over the QUERY SEQUENCE instead —
+    scores stay local per seq-shard and only the small K/V tensors
+    replicate (§Perf iteration 2)."""
+    try:
+        from jax.sharding import PartitionSpec as P
+        return jax.lax.with_sharding_constraint(x, P(*spec_dims))
+    except Exception:
+        return x
+
+
+def _seq_shard_qkv(q, k, v):
+    U = jax.sharding.PartitionSpec.UNCONSTRAINED
+    q = _constrain(q, (U, "model", U, U))       # (B, S/model, H, dh)
+    k = _constrain(k, (U, None, U, U))          # full-seq K/V per device
+    v = _constrain(v, (U, None, U, U))
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def attention_init(key, cfg, *, dtype=jnp.float32) -> Params:
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(key, 6)
+    p: Params = {
+        "wq": layers.scaled_init(ks[0], (d, h, dh), dtype, fan_in=d),
+        "wk": layers.scaled_init(ks[1], (d, kv, dh), dtype, fan_in=d),
+        "wv": layers.scaled_init(ks[2], (d, kv, dh), dtype, fan_in=d),
+        "wo": layers.scaled_init(ks[3], (h, dh, d), dtype, fan_in=h * dh),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, dh), dtype)
+        p["bk"] = jnp.zeros((kv, dh), dtype)
+        p["bv"] = jnp.zeros((kv, dh), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = layers.rmsnorm_init(dh, dtype)
+        p["k_norm"] = layers.rmsnorm_init(dh, dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Masking helpers (computed from positions — never materialised as inputs)
+# ---------------------------------------------------------------------------
+
+def mask_logits(logits: jnp.ndarray, q_pos: jnp.ndarray, k_pos: jnp.ndarray,
+                kind: str, *, window: int = 0, chunk: int = 0,
+                prefix_len: int = 0, k_valid: Optional[jnp.ndarray] = None
+                ) -> jnp.ndarray:
+    """Apply the mask family ``kind`` to ``logits`` (..., Q, K)."""
+    qp = q_pos[:, None]
+    kp = k_pos[None, :]
+    causal = kp <= qp
+    if kind == "global":
+        allowed = causal
+    elif kind == "sliding":
+        allowed = causal & (kp > qp - window)
+    elif kind == "chunked":
+        allowed = causal & ((kp // chunk) == (qp // chunk))
+    elif kind == "prefix":
+        allowed = causal | (kp < prefix_len)
+    else:
+        raise ValueError(f"unknown mask kind {kind!r}")
+    if k_valid is not None:
+        allowed = allowed & k_valid[None, :]
+    return jnp.where(allowed, logits, NEG_INF)
+
+
+# ---------------------------------------------------------------------------
+# Core attention math
+# ---------------------------------------------------------------------------
+
+def _qkv(params: Params, x: jnp.ndarray, cfg) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    if cfg.qk_norm:
+        q = layers.rmsnorm_apply(params["q_norm"], q)
+        k = layers.rmsnorm_apply(params["k_norm"], k)
+    return q, k, v
+
+
+def _sdpa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, q_pos, k_pos,
+          mask_kind: str, *, window=0, chunk=0, prefix_len=0,
+          k_valid=None) -> jnp.ndarray:
+    """q (B,Q,H,Dh), k/v (B,K,KV,Dh) -> (B,Q,H,Dh).  GQA via head reshape."""
+    b, qlen, h, dh = q.shape
+    kv = k.shape[2]
+    group = h // kv
+    scale = dh ** -0.5
+    qg = q.reshape(b, qlen, kv, group, dh)
+    logits = jnp.einsum("bqhgk,bshk->bhgqs", qg * scale, k).astype(jnp.float32)
+    # mask_logits broadcasts over leading (b, kv, group) dims.
+    masked = mask_logits(logits, q_pos, k_pos, mask_kind, window=window,
+                         chunk=chunk, prefix_len=prefix_len, k_valid=k_valid)
+    probs = jax.nn.softmax(masked, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqs,bshk->bqhgk", probs, v)
+    return out.reshape(b, qlen, h, dh)
+
+
+def _chunked_sdpa(q, k, v, positions, mask_kind, *, window=0, chunk=0,
+                  prefix_len=0) -> jnp.ndarray:
+    """lax.scan over query chunks — bounds transient memory to (chunk, S)."""
+    b, s, h, dh = q.shape
+    n_chunks = s // _Q_CHUNK
+    qs = q.reshape(b, n_chunks, _Q_CHUNK, h, dh).transpose(1, 0, 2, 3, 4)
+    pos = positions.reshape(n_chunks, _Q_CHUNK)
+
+    def body(_, inp):
+        qc, pc = inp
+        out = _sdpa(qc, k, v, pc, positions, mask_kind, window=window,
+                    chunk=chunk, prefix_len=prefix_len)
+        return None, out
+
+    _, outs = jax.lax.scan(body, None, (qs, pos))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, dh)
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+def attention_apply(params: Params, x: jnp.ndarray, cfg, *, mask_kind: str,
+                    positions: Optional[jnp.ndarray] = None,
+                    use_rope: bool = True, prefix_len: int = 0) -> jnp.ndarray:
+    """Full-sequence (training / prefill) attention."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)
+    q, k, v = _qkv(params, x, cfg)
+    if use_rope:
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+    if getattr(cfg, "attn_seq_shard", False):
+        q, k, v = _seq_shard_qkv(q, k, v)
+    window = cfg.window or 0
+    chunk = cfg.attn_chunk or 0
+    if s > _CHUNK_THRESHOLD and s % _Q_CHUNK == 0 \
+            and not getattr(cfg, "attn_seq_shard", False):
+        out = _chunked_sdpa(q, k, v, positions, mask_kind, window=window,
+                            chunk=chunk, prefix_len=prefix_len)
+    else:
+        out = _sdpa(q, k, v, positions, positions, mask_kind, window=window,
+                    chunk=chunk, prefix_len=prefix_len)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+
+
+def init_cache(cfg, batch: int, cache_len: int, mask_kind: str,
+               dtype) -> Params:
+    """Allocate a decode KV cache for one attention layer.
+
+    ``sliding``/``chunked`` layers use a ring buffer of the window/chunk size;
+    ``global``/``prefix`` layers hold the full ``cache_len``.
+    """
+    if mask_kind == "sliding":
+        size = min(cfg.window, cache_len)
+    elif mask_kind == "chunked":
+        size = min(cfg.attn_chunk, cache_len)
+    else:
+        size = cache_len
+    kv, dh = cfg.n_kv_heads, cfg.d_head
+    cache_dtype = getattr(cfg, "kv_cache_dtype", dtype)
+    return {
+        "k": jnp.zeros((batch, size, kv, dh), cache_dtype),
+        "v": jnp.zeros((batch, size, kv, dh), cache_dtype),
+    }
+
+
+def attention_decode(params: Params, x: jnp.ndarray, cfg, cache: Params,
+                     index: jnp.ndarray, *, mask_kind: str,
+                     use_rope: bool = True, prefix_len: int = 0
+                     ) -> Tuple[jnp.ndarray, Params]:
+    """One-token decode step.  ``x`` (B, 1, d); ``index`` scalar position."""
+    q, k, v = _qkv(params, x, cfg)
+    pos = jnp.full((1,), index, jnp.int32)
+    if use_rope:
+        q = layers.apply_rope(q, pos, cfg.rope_theta)
+        k = layers.apply_rope(k, pos, cfg.rope_theta)
+    size = cache["k"].shape[1]
+    slot = index % size
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, slot, 0, 0))
+    # Validity + effective key positions for ring buffers.  Keys are cached
+    # post-RoPE so no re-rotation is needed at read time.
+    slots = jnp.arange(size)
+    written = jnp.minimum(index + 1, size)
+    k_valid = slots < written
+    if mask_kind == "chunked":
+        # Ring of size `chunk`: the chunk boundary resets the ring logically —
+        # only slots belonging to the current chunk are visible.
+        chunk = size
+        chunk_start = (index // chunk) * chunk
+        slot_pos = chunk_start + slots
+        k_valid = k_valid & (slot_pos <= index)
+        k_pos = slot_pos
+    elif mask_kind == "sliding":
+        # slot holds absolute position p where p % size == slot and p <= index.
+        cand = (index // size) * size + slots
+        k_pos = jnp.where(cand <= index, cand, cand - size)
+        k_valid = k_valid & (k_pos > index - cfg.window) & (k_pos >= 0)
+    else:
+        k_pos = slots
+    out = _sdpa(q, ck.astype(q.dtype), cv.astype(q.dtype), pos, k_pos,
+                "prefix" if mask_kind == "prefix" else "global",
+                prefix_len=prefix_len, k_valid=k_valid)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return y, {"k": ck, "v": cv}
+
+
+def cross_attention_init(key, cfg, *, dtype=jnp.float32) -> Params:
+    return attention_init(key, cfg, dtype=dtype)
+
+
+def cross_attention_apply(params: Params, x: jnp.ndarray, kv_src: jnp.ndarray,
+                          cfg) -> jnp.ndarray:
+    """Encoder-decoder cross attention (whisper).  No masking, no RoPE."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", kv_src.astype(x.dtype), params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", kv_src.astype(x.dtype), params["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    b, s, h, dh = q.shape
+    kvh = k.shape[2]
+    qg = q.reshape(b, s, kvh, h // kvh, dh)
+    logits = jnp.einsum("bqhgk,bshk->bhgqs", qg * dh ** -0.5, k).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqs,bshk->bqhgk", probs, v).reshape(b, s, h, dh)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+
+
+def bidirectional_attention_apply(params: Params, x: jnp.ndarray, cfg,
+                                  *, use_rope: bool = True) -> jnp.ndarray:
+    """Unmasked self attention (whisper encoder / SigLIP-style stubs)."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+    q, k, v = _qkv(params, x, cfg)
+    if use_rope:
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+    kvh = k.shape[2]
+    h, dh = q.shape[2], q.shape[3]
+    qg = q.reshape(b, s, kvh, h // kvh, dh)
+    logits = jnp.einsum("bqhgk,bshk->bhgqs", qg * dh ** -0.5, k).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqs,bshk->bqhgk", probs, v).reshape(b, s, h, dh)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))

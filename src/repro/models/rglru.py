@@ -1,0 +1,126 @@
+"""Real-Gated Linear Recurrent Unit block (Griffin / RecurrentGemma).
+
+The recurrent block follows arXiv:2402.19427: a gated branch structure with a
+temporal (causal) conv and the RG-LRU diagonal recurrence
+
+    r_t = sigmoid(W_a x_t + b_a)            # recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)            # input gate
+    a_t = a^(c * r_t)   with a = sigmoid(Λ) # per-channel decay, c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t²) * (i_t * x_t)
+
+The sequential scan is the TPU hot-spot; :mod:`repro.kernels.linear_recurrence`
+provides the Pallas kernel and this module uses the jnp oracle formulation
+(``jax.lax.associative_scan`` for training, a one-step update for decode).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+Params = Dict[str, Any]
+
+_C = 8.0  # temperature of the decay exponent (Griffin appendix)
+_CONV_WIDTH = 4
+
+
+def rglru_block_init(key, cfg, *, dtype=jnp.float32) -> Params:
+    d = cfg.d_model
+    dr = cfg.rnn_width or d
+    ks = jax.random.split(key, 8)
+    # Λ init so that a = sigmoid(Λ)^(1/c) is distributed in [0.9, 0.999].
+    u = jax.random.uniform(ks[0], (dr,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(u ** _C / (1.0 - u ** _C))
+    return {
+        "w_in": layers.scaled_init(ks[1], (d, dr), dtype, fan_in=d),
+        "w_gate_branch": layers.scaled_init(ks[2], (d, dr), dtype, fan_in=d),
+        "conv_w": layers.normal_init(ks[3], (_CONV_WIDTH, dr), dtype),
+        "conv_b": jnp.zeros((dr,), dtype),
+        "w_a": layers.scaled_init(ks[4], (dr, dr), dtype, fan_in=dr),
+        "b_a": jnp.zeros((dr,), jnp.float32),
+        "w_x": layers.scaled_init(ks[5], (dr, dr), dtype, fan_in=dr),
+        "b_x": jnp.zeros((dr,), jnp.float32),
+        "lambda": lam,
+        "w_out": layers.scaled_init(ks[6], (dr, d), dtype, fan_in=dr),
+    }
+
+
+def _gates(params: Params, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (log_a, gated_input) both (..., dr), computed in fp32."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ params["w_a"].astype(jnp.float32) + params["b_a"])
+    i = jax.nn.sigmoid(xf @ params["w_x"].astype(jnp.float32) + params["b_x"])
+    log_a = -_C * r * jax.nn.softplus(-params["lambda"])  # log sigmoid(Λ)^(c·r)
+    a_sq = jnp.exp(2.0 * log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a_sq, 1e-12)) * (i * xf)
+    return log_a, gated
+
+
+def rglru_scan(log_a: jnp.ndarray, gated: jnp.ndarray,
+               h0: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Associative scan of h_t = exp(log_a_t)·h_{t-1} + gated_t over axis 1.
+
+    log_a, gated: (B, S, dr) fp32.  Returns (B, S, dr).
+    """
+    if h0 is not None:
+        gated = gated.at[:, 0].add(jnp.exp(log_a[:, 0]) * h0)
+
+    def combine(left, right):
+        la, xa = left
+        lb, xb = right
+        return la + lb, jnp.exp(lb) * xa + xb
+
+    _, h = jax.lax.associative_scan(combine, (log_a, gated), axis=1)
+    return h
+
+
+def _causal_conv(params: Params, x: jnp.ndarray,
+                 state: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Depthwise causal conv of width 4 along axis 1."""
+    w = params["conv_w"].astype(x.dtype)  # (W, dr)
+    pad = jnp.zeros((x.shape[0], _CONV_WIDTH - 1, x.shape[-1]), x.dtype) \
+        if state is None else state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(_CONV_WIDTH))
+    return out + params["conv_b"].astype(x.dtype)
+
+
+def rglru_block_apply(params: Params, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    """Training / prefill forward.  x (B, S, d) -> (B, S, d)."""
+    main = jnp.einsum("bsd,dr->bsr", x, params["w_in"].astype(x.dtype))
+    gate_branch = jax.nn.gelu(
+        jnp.einsum("bsd,dr->bsr", x, params["w_gate_branch"].astype(x.dtype)))
+    main = _causal_conv(params, main)
+    log_a, gated = _gates(params, main)
+    h = rglru_scan(log_a, gated).astype(x.dtype)
+    y = h * gate_branch
+    return jnp.einsum("bsr,rd->bsd", y, params["w_out"].astype(x.dtype))
+
+
+def init_cache(cfg, batch: int, dtype) -> Params:
+    dr = cfg.rnn_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, dr), jnp.float32),
+        "conv": jnp.zeros((batch, _CONV_WIDTH - 1, dr), dtype),
+    }
+
+
+def rglru_block_decode(params: Params, x: jnp.ndarray, cfg, cache: Params
+                       ) -> Tuple[jnp.ndarray, Params]:
+    """One-token step.  x (B, 1, d)."""
+    main = jnp.einsum("bsd,dr->bsr", x, params["w_in"].astype(x.dtype))
+    gate_branch = jax.nn.gelu(
+        jnp.einsum("bsd,dr->bsr", x, params["w_gate_branch"].astype(x.dtype)))
+    conv_in = jnp.concatenate([cache["conv"].astype(x.dtype), main], axis=1)
+    w = params["conv_w"].astype(x.dtype)
+    conv_out = jnp.einsum("bwr,wr->br", conv_in, w)[:, None, :] \
+        + params["conv_b"].astype(x.dtype)
+    log_a, gated = _gates(params, conv_out)
+    h = jnp.exp(log_a[:, 0]) * cache["h"] + gated[:, 0]
+    y = h[:, None, :].astype(x.dtype) * gate_branch
+    out = jnp.einsum("bsr,rd->bsd", y, params["w_out"].astype(x.dtype))
+    new_cache = {"h": h, "conv": conv_in[:, 1:].astype(cache["conv"].dtype)}
+    return out, new_cache

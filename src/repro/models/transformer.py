@@ -1,0 +1,338 @@
+"""Block-assembly decoder-only transformer covering dense / GQA / MoE /
+SSM / hybrid / VLM architectures.
+
+An architecture is a *pattern unit* — a short tuple of (sequence-mixer kind,
+ffn kind) pairs — repeated ``n_layers // len(unit)`` times.  The repeated
+unit is executed with ``lax.scan`` over stacked per-repetition parameters
+(with optional per-unit remat), which keeps the HLO size O(unit) rather than
+O(n_layers) and makes 512-device lowering of 80-layer models tractable.
+
+Sequence-mixer kinds: ``attn`` (causal global), ``swa`` (sliding window),
+``chunked`` (llama4 chunked-local), ``rec`` (RG-LRU), ``slstm``, ``mlstm``.
+FFN kinds: ``dense``, ``moe``, ``none``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers, moe, rglru, xlstm
+
+Params = Dict[str, Any]
+
+ATTENTION_KINDS = ("attn", "swa", "chunked")
+MASK_FOR_KIND = {"attn": "global", "swa": "sliding", "chunked": "chunked"}
+
+
+def compute_stages(n_layers: int, pattern: Tuple[str, ...]
+                   ) -> List[Tuple[Tuple[str, ...], int]]:
+    """Split ``n_layers`` into (unit, repetitions) stages."""
+    u = len(pattern)
+    reps, rem = divmod(n_layers, u)
+    stages = []
+    if reps:
+        stages.append((pattern, reps))
+    if rem:
+        stages.append((pattern[:rem], 1))
+    return stages
+
+
+class Transformer:
+    """Pure-function model: ``init`` -> params pytree, ``apply`` -> logits."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+        pat = tuple(zip(cfg.block_pattern, cfg.ffn_pattern))
+        self.stages = compute_stages(cfg.n_layers, pat)
+
+    # -- initialisation -----------------------------------------------------
+
+    def _layer_init(self, key, kind: str, ffn_kind: str) -> Params:
+        cfg = self.cfg
+        dtype = cfg.param_dtype
+        ks = jax.random.split(key, 4)
+        p: Params = {"norm1": layers.norm_init(cfg.norm, cfg.d_model, dtype)}
+        if kind in ATTENTION_KINDS:
+            p["attn"] = attention.attention_init(ks[0], cfg, dtype=dtype)
+        elif kind == "rec":
+            p["rec"] = rglru.rglru_block_init(ks[0], cfg, dtype=dtype)
+        elif kind == "slstm":
+            p["slstm"] = xlstm.slstm_block_init(ks[0], cfg, dtype=dtype)
+        elif kind == "mlstm":
+            p["mlstm"] = xlstm.mlstm_block_init(ks[0], cfg, dtype=dtype)
+        else:
+            raise ValueError(f"unknown sequence mixer {kind!r}")
+        if ffn_kind == "dense":
+            p["norm2"] = layers.norm_init(cfg.norm, cfg.d_model, dtype)
+            p["mlp"] = layers.mlp_init(ks[1], cfg.d_model, cfg.d_ff,
+                                       gated=cfg.gated_mlp, bias=cfg.mlp_bias,
+                                       dtype=dtype)
+        elif ffn_kind == "moe":
+            p["norm2"] = layers.norm_init(cfg.norm, cfg.d_model, dtype)
+            p["moe"] = moe.moe_init(ks[1], cfg, dtype=dtype)
+        elif ffn_kind != "none":
+            raise ValueError(f"unknown ffn kind {ffn_kind!r}")
+        return p
+
+    def _unit_init(self, key, unit) -> Params:
+        ks = jax.random.split(key, len(unit))
+        return {str(i): self._layer_init(ks[i], kind, ffn_kind)
+                for i, (kind, ffn_kind) in enumerate(unit)}
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        ks = jax.random.split(key, len(self.stages) + 2)
+        params: Params = {
+            "embed": layers.embedding_init(ks[0], cfg.vocab_size, cfg.d_model,
+                                           tie=cfg.tie_embeddings,
+                                           dtype=cfg.param_dtype),
+            "final_norm": layers.norm_init(cfg.norm, cfg.d_model,
+                                           cfg.param_dtype),
+        }
+        for si, (unit, reps) in enumerate(self.stages):
+            unit_keys = jax.random.split(ks[si + 1], reps)
+            params[f"stage_{si}"] = jax.vmap(
+                functools.partial(self._unit_init, unit=unit))(unit_keys)
+        return params
+
+    # -- forward (train / prefill) -------------------------------------------
+
+    def _layer_apply(self, p: Params, x, kind, ffn_kind, *, positions,
+                     prefix_len, aux):
+        cfg = self.cfg
+        h = layers.norm_apply(cfg.norm, p["norm1"], x)
+        if kind in ATTENTION_KINDS:
+            mask_kind = MASK_FOR_KIND[kind]
+            if kind == "attn" and prefix_len > 0:
+                mask_kind = "prefix"
+            use_rope = cfg.rope_on_global if kind == "attn" else True
+            y = attention.attention_apply(p["attn"], h, cfg,
+                                          mask_kind=mask_kind,
+                                          positions=positions,
+                                          use_rope=use_rope,
+                                          prefix_len=prefix_len)
+        elif kind == "rec":
+            y = rglru.rglru_block_apply(p["rec"], h, cfg)
+        elif kind == "slstm":
+            y = xlstm.slstm_block_apply(p["slstm"], h, cfg)
+        else:  # mlstm
+            y = xlstm.mlstm_block_apply(p["mlstm"], h, cfg)
+        x = x + y
+        if ffn_kind == "dense":
+            h = layers.norm_apply(cfg.norm, p["norm2"], x)
+            x = x + layers.mlp_apply(p["mlp"], h, activation=cfg.activation)
+        elif ffn_kind == "moe":
+            h = layers.norm_apply(cfg.norm, p["norm2"], x)
+            y, aux_inc = moe.moe_apply(p["moe"], h, cfg)
+            x = x + y
+            aux = aux + aux_inc
+        return x, aux
+
+    def _unit_apply(self, p: Params, x, unit, *, positions, prefix_len, aux):
+        for i, (kind, ffn_kind) in enumerate(unit):
+            x, aux = self._layer_apply(p[str(i)], x, kind, ffn_kind,
+                                       positions=positions,
+                                       prefix_len=prefix_len, aux=aux)
+        return x, aux
+
+    def apply(self, params: Params, tokens: jnp.ndarray, *,
+              extra_embeddings: Optional[jnp.ndarray] = None
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """tokens (B, S_text) [+ prefix embeddings (B, P, d)] -> (logits, aux).
+
+        For VLM configs ``extra_embeddings`` holds the stubbed patch
+        embeddings; they are prepended and attended bidirectionally
+        (prefix-LM).  Logits cover only the text positions.
+        """
+        cfg = self.cfg
+        x = layers.embed_apply(params["embed"], tokens, cfg.compute_dtype)
+        if cfg.embed_scale:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+        prefix_len = 0
+        if extra_embeddings is not None:
+            prefix_len = extra_embeddings.shape[1]
+            x = jnp.concatenate([extra_embeddings.astype(x.dtype), x], axis=1)
+        positions = jnp.arange(x.shape[1])
+        aux = jnp.zeros((), jnp.float32)
+
+        for si, (unit, reps) in enumerate(self.stages):
+            def body(carry, rep_params, unit=unit):
+                xc, auxc = carry
+                xc, auxc = self._unit_apply(rep_params, xc, unit,
+                                            positions=positions,
+                                            prefix_len=prefix_len, aux=auxc)
+                return (xc, auxc), None
+
+            if self.cfg.remat:
+                body = jax.checkpoint(
+                    body, policy=jax.checkpoint_policies.nothing_saveable)
+            if self.cfg.scan_layers:
+                (x, aux), _ = jax.lax.scan(body, (x, aux),
+                                           params[f"stage_{si}"])
+            else:  # unrolled (roofline accounting mode)
+                for r in range(reps):
+                    rp = jax.tree.map(lambda l, r=r: l[r],
+                                      params[f"stage_{si}"])
+                    (x, aux), _ = body((x, aux), rp)
+
+        x = layers.norm_apply(cfg.norm, params["final_norm"], x)
+        if prefix_len:
+            x = x[:, prefix_len:]
+        logits = layers.unembed_apply(params["embed"], x)
+        return logits, aux
+
+    # -- decode ---------------------------------------------------------------
+
+    def _layer_cache(self, kind, ffn_kind, batch, cache_len):
+        cfg = self.cfg
+        dtype = cfg.compute_dtype
+        if kind in ATTENTION_KINDS:
+            return attention.init_cache(cfg, batch, cache_len,
+                                        MASK_FOR_KIND[kind], dtype)
+        if kind == "rec":
+            return rglru.init_cache(cfg, batch, dtype)
+        if kind == "slstm":
+            return xlstm.slstm_init_cache(cfg, batch, dtype)
+        return xlstm.mlstm_init_cache(cfg, batch, dtype)
+
+    def init_cache(self, batch: int, cache_len: int) -> Params:
+        cache: Params = {}
+        for si, (unit, reps) in enumerate(self.stages):
+            unit_cache = {str(i): self._layer_cache(kind, ffn_kind, batch,
+                                                    cache_len)
+                          for i, (kind, ffn_kind) in enumerate(unit)}
+            cache[f"stage_{si}"] = jax.tree.map(
+                lambda a: jnp.zeros((reps,) + a.shape, a.dtype), unit_cache)
+        return cache
+
+    def _layer_decode(self, p, x, kind, ffn_kind, cache, index, prefix_len):
+        cfg = self.cfg
+        h = layers.norm_apply(cfg.norm, p["norm1"], x)
+        if kind in ATTENTION_KINDS:
+            mask_kind = MASK_FOR_KIND[kind]
+            if kind == "attn" and prefix_len > 0:
+                mask_kind = "prefix"
+            use_rope = cfg.rope_on_global if kind == "attn" else True
+            y, cache = attention.attention_decode(p["attn"], h, cfg, cache,
+                                                  index, mask_kind=mask_kind,
+                                                  use_rope=use_rope,
+                                                  prefix_len=prefix_len)
+        elif kind == "rec":
+            y, cache = rglru.rglru_block_decode(p["rec"], h, cfg, cache)
+        elif kind == "slstm":
+            y, cache = xlstm.slstm_block_decode(p["slstm"], h, cfg, cache)
+        else:
+            y, cache = xlstm.mlstm_block_decode(p["mlstm"], h, cfg, cache)
+        x = x + y
+        if ffn_kind == "dense":
+            h = layers.norm_apply(cfg.norm, p["norm2"], x)
+            x = x + layers.mlp_apply(p["mlp"], h, activation=cfg.activation)
+        elif ffn_kind == "moe":
+            h = layers.norm_apply(cfg.norm, p["norm2"], x)
+            y, _ = moe.moe_apply(p["moe"], h, cfg)
+            x = x + y
+        return x, cache
+
+    def prefill_prefix(self, params: Params, cache: Params,
+                       embeddings: jnp.ndarray) -> Params:
+        """Populate decode caches from the multimodal prefix (VLM serving).
+
+        Runs the prefix embeddings through the stack with the prefix-LM mask
+        (bidirectional within the prefix — prefix hidden states depend only
+        on the prefix) and writes each attention layer's K/V into cache
+        slots [0, P).  Only attention mixers are supported — the VLM config
+        has no recurrent layers.
+        """
+        cfg = self.cfg
+        p_len = embeddings.shape[1]
+        positions = jnp.arange(p_len)
+        x = embeddings.astype(cfg.compute_dtype)
+        new_cache: Params = {}
+        for si, (unit, reps) in enumerate(self.stages):
+            def body(xc, inp, unit=unit):
+                rep_params, rep_cache = inp
+                out_cache = {}
+                for i, (kind, ffn_kind) in enumerate(unit):
+                    assert kind in ATTENTION_KINDS, \
+                        "prefix prefill supports attention mixers only"
+                    p = rep_params[str(i)]
+                    c = rep_cache[str(i)]
+                    h = layers.norm_apply(cfg.norm, p["norm1"], xc)
+                    use_rope = cfg.rope_on_global if kind == "attn" else True
+                    q, k, v = attention._qkv(p["attn"], h, cfg)
+                    if use_rope:
+                        q = layers.apply_rope(q, positions, cfg.rope_theta)
+                        k = layers.apply_rope(k, positions, cfg.rope_theta)
+                    # bidirectional among prefix positions (prefix-LM)
+                    out = attention._sdpa(q, k, v, positions, positions,
+                                          "prefix", prefix_len=p_len)
+                    y = jnp.einsum("bshk,hkd->bsd", out,
+                                   p["attn"]["wo"].astype(xc.dtype))
+                    xc = xc + y
+                    ck = jax.lax.dynamic_update_slice(
+                        c["k"], k.astype(c["k"].dtype), (0, 0, 0, 0))
+                    cv = jax.lax.dynamic_update_slice(
+                        c["v"], v.astype(c["v"].dtype), (0, 0, 0, 0))
+                    out_cache[str(i)] = {"k": ck, "v": cv}
+                    if ffn_kind == "dense":
+                        h = layers.norm_apply(cfg.norm, p["norm2"], xc)
+                        xc = xc + layers.mlp_apply(p["mlp"], h,
+                                                   activation=cfg.activation)
+                    elif ffn_kind == "moe":
+                        h = layers.norm_apply(cfg.norm, p["norm2"], xc)
+                        y, _ = moe.moe_apply(p["moe"], h, cfg)
+                        xc = xc + y
+                return xc, out_cache
+
+            x, new_cache[f"stage_{si}"] = jax.lax.scan(
+                body, x, (params[f"stage_{si}"], cache[f"stage_{si}"]))
+        return new_cache
+
+    def decode_step(self, params: Params, token: jnp.ndarray, cache: Params,
+                    index: jnp.ndarray, *, prefix_len: int = 0
+                    ) -> Tuple[jnp.ndarray, Params]:
+        """token (B, 1) + cache + scalar index -> (logits (B, 1, V), cache)."""
+        cfg = self.cfg
+        x = layers.embed_apply(params["embed"], token, cfg.compute_dtype)
+        if cfg.embed_scale:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+        new_cache: Params = {}
+        for si, (unit, reps) in enumerate(self.stages):
+            def body(xc, inp, unit=unit):
+                rep_params, rep_cache = inp
+                out_cache = {}
+                for i, (kind, ffn_kind) in enumerate(unit):
+                    xc, out_cache[str(i)] = self._layer_decode(
+                        rep_params[str(i)], xc, kind, ffn_kind,
+                        rep_cache[str(i)], index, prefix_len)
+                return xc, out_cache
+
+            if self.cfg.scan_layers:
+                x, new_cache[f"stage_{si}"] = jax.lax.scan(
+                    body, x, (params[f"stage_{si}"], cache[f"stage_{si}"]))
+            else:  # unrolled (roofline accounting mode)
+                outs = []
+                for r in range(reps):
+                    sl = lambda l, r=r: l[r]
+                    x, c = body(x, (jax.tree.map(sl, params[f"stage_{si}"]),
+                                    jax.tree.map(sl, cache[f"stage_{si}"])))
+                    outs.append(c)
+                new_cache[f"stage_{si}"] = jax.tree.map(
+                    lambda *ls: jnp.stack(ls), *outs)
+        x = layers.norm_apply(cfg.norm, params["final_norm"], x)
+        logits = layers.unembed_apply(params["embed"], x)
+        return logits, new_cache
+
+
+def loss_fn(model: Transformer, params: Params, batch: Dict[str, jnp.ndarray]
+            ) -> jnp.ndarray:
+    """Next-token cross entropy + MoE aux loss."""
+    cfg = model.cfg
+    logits, aux = model.apply(params, batch["tokens"],
+                              extra_embeddings=batch.get("embeddings"))
+    loss = layers.softmax_cross_entropy(logits, batch["labels"],
+                                        batch.get("loss_mask"))
+    return loss + cfg.moe_aux_weight * aux

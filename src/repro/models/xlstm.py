@@ -1,0 +1,243 @@
+"""xLSTM blocks — sLSTM (scalar memory, recurrent hidden mixing) and mLSTM
+(matrix memory, fully parallelizable) following arXiv:2405.04517.
+
+Both use exponential gating with the log-domain stabiliser state ``m``:
+
+    m_t = max(log f_t + m_{t-1}, log i_t)
+    i'  = exp(log i_t - m_t),  f' = exp(log f_t + m_{t-1} - m_t)
+
+mLSTM recurrence (per head):   C_t = f'·C_{t-1} + i'·v_t k_tᵀ
+                               n_t = f'·n_{t-1} + i'·k_t
+                               h_t = C_t q_t / max(|n_tᵀ q_t|, 1)
+
+sLSTM keeps a scalar cell per unit with block-diagonal (per-head) recurrent
+weights on the gate pre-activations, which makes it strictly sequential —
+implemented as a ``lax.scan``; the diagonal-recurrence Pallas kernel covers
+the RG-LRU-style scans, the sLSTM scan stays XLA (documented in DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+Params = Dict[str, Any]
+
+_CONV_WIDTH = 4
+_PF_MLSTM = 2.0    # mLSTM up-projection factor
+_PF_SLSTM = 4.0 / 3.0
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_block_init(key, cfg, *, dtype=jnp.float32) -> Params:
+    d = cfg.d_model
+    di = int(_PF_MLSTM * d)
+    nh = cfg.n_heads
+    dh = di // nh
+    ks = jax.random.split(key, 10)
+    return {
+        "w_up_main": layers.scaled_init(ks[0], (d, di), dtype, fan_in=d),
+        "w_up_gate": layers.scaled_init(ks[1], (d, di), dtype, fan_in=d),
+        "conv_w": layers.normal_init(ks[2], (_CONV_WIDTH, di), dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "wq": layers.scaled_init(ks[3], (di, nh, dh), dtype, fan_in=di),
+        "wk": layers.scaled_init(ks[4], (di, nh, dh), dtype, fan_in=di),
+        "wv": layers.scaled_init(ks[5], (di, nh, dh), dtype, fan_in=di),
+        "w_igate": layers.normal_init(ks[6], (di, nh), jnp.float32),
+        "b_igate": jnp.zeros((nh,), jnp.float32),
+        "w_fgate": layers.normal_init(ks[7], (di, nh), jnp.float32),
+        "b_fgate": jnp.full((nh,), 3.0, jnp.float32),  # open forget gates
+        "norm_scale": jnp.ones((nh, dh), jnp.float32),
+        "w_down": layers.scaled_init(ks[8], (di, d), dtype, fan_in=di),
+    }
+
+
+def _causal_conv(w, b, x, state=None):
+    pad = jnp.zeros((x.shape[0], _CONV_WIDTH - 1, x.shape[-1]), x.dtype) \
+        if state is None else state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w.astype(x.dtype)[i]
+              for i in range(_CONV_WIDTH))
+    return out + b.astype(x.dtype)
+
+
+def _mlstm_cell(carry, inp):
+    """One timestep of the stabilised mLSTM recurrence.  All fp32."""
+    c, n, m = carry                       # (B,H,dk,dv), (B,H,dk), (B,H)
+    q, k, v, log_i, log_f = inp           # (B,H,dk) ×3, (B,H) ×2
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_p = jnp.exp(log_i - m_new)[..., None]
+    f_p = jnp.exp(log_f + m - m_new)[..., None]
+    n_new = f_p * n + i_p * k
+    c_new = f_p[..., None] * c + i_p[..., None] * (k[..., :, None] * v[..., None, :])
+    num = jnp.einsum("bhkv,bhk->bhv", c_new, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, q)), 1.0)
+    h = num / den[..., None]
+    return (c_new, n_new, m_new), h
+
+
+def _mlstm_inner(params: Params, x: jnp.ndarray, cfg,
+                 state=None) -> Tuple[jnp.ndarray, Tuple]:
+    """Shared mLSTM body.  x (B, S, d) -> (y (B, S, d), new_state)."""
+    b, s, d = x.shape
+    nh = cfg.n_heads
+    main = jnp.einsum("bsd,di->bsi", x, params["w_up_main"].astype(x.dtype))
+    gate = jax.nn.silu(
+        jnp.einsum("bsd,di->bsi", x, params["w_up_gate"].astype(x.dtype)))
+    conv_state = None if state is None else state[3]
+    cm = jax.nn.silu(_causal_conv(params["conv_w"], params["conv_b"], main,
+                                  conv_state))
+    di = main.shape[-1]
+    dh = di // nh
+    q = jnp.einsum("bsi,ihk->bshk", cm, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsi,ihk->bshk", cm, params["wk"].astype(x.dtype)) * dh ** -0.5
+    v = jnp.einsum("bsi,ihk->bshk", main, params["wv"].astype(x.dtype))
+    log_i = jnp.einsum("bsi,ih->bsh", cm.astype(jnp.float32),
+                       params["w_igate"]) + params["b_igate"]
+    log_f = jax.nn.log_sigmoid(
+        jnp.einsum("bsi,ih->bsh", cm.astype(jnp.float32), params["w_fgate"])
+        + params["b_fgate"])
+
+    if state is None:
+        c0 = jnp.zeros((b, nh, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, nh, dh), jnp.float32)
+        m0 = jnp.zeros((b, nh), jnp.float32)
+    else:
+        c0, n0, m0 = state[0], state[1], state[2]
+
+    xs = (q.astype(jnp.float32).transpose(1, 0, 2, 3),
+          k.astype(jnp.float32).transpose(1, 0, 2, 3),
+          v.astype(jnp.float32).transpose(1, 0, 2, 3),
+          log_i.transpose(1, 0, 2), log_f.transpose(1, 0, 2))
+    (c, n, m), hs = jax.lax.scan(_mlstm_cell, (c0, n0, m0), xs)
+    h = hs.transpose(1, 0, 2, 3)                        # (B,S,H,dh)
+    h = layers.rmsnorm_apply({"scale": params["norm_scale"].reshape(-1)},
+                             h.reshape(b, s, di)).astype(x.dtype)
+    y = h * gate
+    out = jnp.einsum("bsi,id->bsd", y, params["w_down"].astype(x.dtype))
+    new_conv = (main if state is None else
+                jnp.concatenate([conv_state.astype(main.dtype), main], axis=1)
+                )[:, -(_CONV_WIDTH - 1):]
+    return out, (c, n, m, new_conv)
+
+
+def mlstm_block_apply(params: Params, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    y, _ = _mlstm_inner(params, x, cfg)
+    return y
+
+
+def mlstm_init_cache(cfg, batch: int, dtype) -> Tuple:
+    d = cfg.d_model
+    di = int(_PF_MLSTM * d)
+    nh = cfg.n_heads
+    dh = di // nh
+    return (jnp.zeros((batch, nh, dh, dh), jnp.float32),
+            jnp.zeros((batch, nh, dh), jnp.float32),
+            jnp.zeros((batch, nh), jnp.float32),
+            jnp.zeros((batch, _CONV_WIDTH - 1, di), dtype))
+
+
+def mlstm_block_decode(params: Params, x: jnp.ndarray, cfg, cache: Tuple
+                       ) -> Tuple[jnp.ndarray, Tuple]:
+    return _mlstm_inner(params, x, cfg, state=cache)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_block_init(key, cfg, *, dtype=jnp.float32) -> Params:
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    dff = int(_PF_SLSTM * d)
+    ks = jax.random.split(key, 9)
+    return {
+        "conv_w": layers.normal_init(ks[0], (_CONV_WIDTH, d), dtype),
+        "conv_b": jnp.zeros((d,), dtype),
+        # input weights for the four gates (i, f, z, o)
+        "w_gates": layers.scaled_init(ks[1], (d, 4 * d), dtype, fan_in=d),
+        "b_gates": jnp.concatenate([jnp.zeros((d,)), jnp.full((d,), 3.0),
+                                    jnp.zeros((2 * d,))]).astype(jnp.float32),
+        # block-diagonal recurrent weights, per head: (4 gates, H, dh, dh)
+        "r_gates": layers.scaled_init(ks[2], (4, nh, dh, dh), jnp.float32,
+                                      fan_in=dh),
+        "norm_scale": jnp.ones((d,), jnp.float32),
+        "w_up_gate": layers.scaled_init(ks[3], (d, dff), dtype, fan_in=d),
+        "w_up": layers.scaled_init(ks[4], (d, dff), dtype, fan_in=d),
+        "w_down": layers.scaled_init(ks[5], (dff, d), dtype, fan_in=dff),
+    }
+
+
+def _slstm_cell(params_r, carry, inp):
+    """One sLSTM timestep.  carry: (c, n, h, m) each (B, d) fp32."""
+    c, n, h, m = carry
+    pre = inp  # (B, 4d) input contribution
+    b, d4 = pre.shape
+    d = d4 // 4
+    nh = params_r.shape[1]
+    dh = d // nh
+    hh = h.reshape(b, nh, dh)
+    rec = jnp.einsum("bhx,ghxy->bghy", hh, params_r).reshape(b, 4 * d)
+    zi, zf, zz, zo = jnp.split(pre + rec, 4, axis=-1)
+    log_i = zi
+    log_f = jax.nn.log_sigmoid(zf)
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_p = jnp.exp(log_i - m_new)
+    f_p = jnp.exp(log_f + m - m_new)
+    z = jnp.tanh(zz)
+    o = jax.nn.sigmoid(zo)
+    c_new = f_p * c + i_p * z
+    n_new = f_p * n + i_p
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def _slstm_inner(params: Params, x: jnp.ndarray, cfg,
+                 state=None) -> Tuple[jnp.ndarray, Tuple]:
+    b, s, d = x.shape
+    conv_state = None if state is None else state[4]
+    cx = jax.nn.silu(_causal_conv(params["conv_w"], params["conv_b"], x,
+                                  conv_state))
+    pre = (jnp.einsum("bsd,de->bse", cx, params["w_gates"].astype(x.dtype))
+           .astype(jnp.float32) + params["b_gates"])
+    if state is None:
+        zeros = jnp.zeros((b, d), jnp.float32)
+        carry = (zeros, zeros, zeros, zeros)
+    else:
+        carry = (state[0], state[1], state[2], state[3])
+    cell = lambda ca, inp: _slstm_cell(params["r_gates"], ca, inp)
+    carry, hs = jax.lax.scan(cell, carry, pre.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2)                           # (B,S,d)
+    h = layers.rmsnorm_apply({"scale": params["norm_scale"]}, h).astype(x.dtype)
+    up = jnp.einsum("bsd,df->bsf", h, params["w_up"].astype(x.dtype))
+    gate = jax.nn.gelu(
+        jnp.einsum("bsd,df->bsf", h, params["w_up_gate"].astype(x.dtype)))
+    out = jnp.einsum("bsf,fd->bsd", up * gate, params["w_down"].astype(x.dtype))
+    new_conv = (x if state is None else
+                jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+                )[:, -(_CONV_WIDTH - 1):]
+    return out, carry + (new_conv,)
+
+
+def slstm_block_apply(params: Params, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    y, _ = _slstm_inner(params, x, cfg)
+    return y
+
+
+def slstm_init_cache(cfg, batch: int, dtype) -> Tuple:
+    d = cfg.d_model
+    zeros = jnp.zeros((batch, d), jnp.float32)
+    return (zeros, zeros, zeros, zeros,
+            jnp.zeros((batch, _CONV_WIDTH - 1, d), dtype))
+
+
+def slstm_block_decode(params: Params, x: jnp.ndarray, cfg, cache: Tuple
+                       ) -> Tuple[jnp.ndarray, Tuple]:
+    return _slstm_inner(params, x, cfg, state=cache)

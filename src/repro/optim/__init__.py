@@ -1,0 +1,9 @@
+"""Optimizers (pure-pytree, optax-style init/update pairs)."""
+from repro.optim.optimizers import (Optimizer, sgd, momentum, adam, adamw,
+                                    clip_by_global_norm, global_norm)
+from repro.optim.schedules import (constant, cosine_decay, linear_warmup,
+                                   warmup_cosine)
+
+__all__ = ["Optimizer", "sgd", "momentum", "adam", "adamw",
+           "clip_by_global_norm", "global_norm", "constant", "cosine_decay",
+           "linear_warmup", "warmup_cosine"]

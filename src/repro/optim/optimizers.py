@@ -1,0 +1,125 @@
+"""Pytree optimizers in the init/update style (no external deps).
+
+Each factory returns an ``Optimizer`` with
+  ``init(params) -> opt_state`` and
+  ``update(grads, opt_state, params, step) -> (new_params, new_opt_state)``.
+
+``step`` is a scalar int array so schedules stay jittable.  Moment dtype is
+configurable (``opt_dtype``) — the ≥300B configs keep Adam moments in bf16 to
+fit the dry-run memory budget (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Params], Params]
+    update: Callable[..., Any]
+
+
+def _as_schedule(lr) -> Schedule:
+    if callable(lr):
+        return lr
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def global_norm(tree: Params) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(tree: Params, max_norm: float) -> Params:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda l: (l * scale.astype(l.dtype)), tree)
+
+
+def sgd(lr) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return {}
+
+    def update(grads, state, params, step):
+        eta = sched(step)
+        new = jax.tree.map(lambda p, g: p - (eta * g).astype(p.dtype),
+                           params, grads)
+        return new, state
+
+    return Optimizer(init, update)
+
+
+def momentum(lr, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return {"m": jax.tree.map(jnp.zeros_like, params)}
+
+    def update(grads, state, params, step):
+        eta = sched(step)
+        m = jax.tree.map(lambda m_, g: beta * m_ + g, state["m"], grads)
+        if nesterov:
+            upd = jax.tree.map(lambda m_, g: beta * m_ + g, m, grads)
+        else:
+            upd = m
+        new = jax.tree.map(lambda p, u: p - (eta * u).astype(p.dtype),
+                           params, upd)
+        return new, {"m": m}
+
+    return Optimizer(init, update)
+
+
+def _adam_core(lr, b1, b2, eps, weight_decay, opt_dtype) -> Optimizer:
+    sched = _as_schedule(lr)
+    dt = jnp.dtype(opt_dtype)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, dt)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        eta = sched(step)
+        t = step.astype(jnp.float32) + 1.0
+        m = jax.tree.map(lambda m_, g: (b1 * m_.astype(jnp.float32)
+                                        + (1 - b1) * g.astype(jnp.float32)
+                                        ).astype(dt), state["m"], grads)
+        v = jax.tree.map(lambda v_, g: (b2 * v_.astype(jnp.float32)
+                                        + (1 - b2) * jnp.square(
+                                            g.astype(jnp.float32))
+                                        ).astype(dt), state["v"], grads)
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def step_fn(p, m_, v_):
+            mhat = m_.astype(jnp.float32) / bc1
+            vhat = v_.astype(jnp.float32) / bc2
+            upd = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                upd = upd + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - eta * upd).astype(p.dtype)
+
+        new = jax.tree.map(step_fn, params, m, v)
+        return new, {"m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         opt_dtype: str = "float32") -> Optimizer:
+    return _adam_core(lr, b1, b2, eps, 0.0, opt_dtype)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.01, opt_dtype: str = "float32") -> Optimizer:
+    return _adam_core(lr, b1, b2, eps, weight_decay, opt_dtype)

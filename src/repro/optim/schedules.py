@@ -1,0 +1,35 @@
+"""Learning-rate schedules as pure functions of a scalar step array."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_warmup(lr: float, warmup_steps: int):
+    def sched(step):
+        frac = jnp.minimum(step.astype(jnp.float32) + 1.0, warmup_steps) \
+            / max(warmup_steps, 1)
+        return lr * frac
+    return sched
+
+
+def cosine_decay(lr: float, decay_steps: int, final_frac: float = 0.1):
+    def sched(step):
+        t = jnp.clip(step.astype(jnp.float32) / max(decay_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return lr * (final_frac + (1.0 - final_frac) * cos)
+    return sched
+
+
+def warmup_cosine(lr: float, warmup_steps: int, decay_steps: int,
+                  final_frac: float = 0.1):
+    wu = linear_warmup(lr, warmup_steps)
+    cd = cosine_decay(lr, decay_steps, final_frac)
+
+    def sched(step):
+        return jnp.where(step < warmup_steps, wu(step),
+                         cd(step - warmup_steps))
+    return sched

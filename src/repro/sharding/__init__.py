@@ -1,0 +1,7 @@
+"""Logical-axis sharding rules -> NamedSharding pytrees."""
+from repro.sharding.rules import (param_shardings, input_shardings,
+                                  batch_axes, spec_for_param, cache_spec,
+                                  tree_specs)
+
+__all__ = ["param_shardings", "input_shardings", "batch_axes",
+           "spec_for_param", "cache_spec", "tree_specs"]

@@ -1,0 +1,226 @@
+"""Logical-axis sharding rules (DESIGN.md §5).
+
+Every parameter leaf is matched by NAME (the leaf key in the params pytree)
+to a rule giving, in *negative axis positions* so the stacked-scan leading
+``reps`` axis needs no special casing:
+
+* a TENSOR dimension chain — tried in order, the first whose size divides the
+  ``model`` mesh axis wins (tensor parallelism), and
+* an optional FSDP dimension chain — sharded over ``data`` (fully-sharded
+  data parallelism, which is what lets the 110B/314B/400B configs fit
+  params+Adam moments in 16 GB/chip).
+
+The ``pod`` axis of the multi-pod mesh is pure data parallelism: params are
+replicated across pods, the batch (and gradient all-reduce) spans it.
+
+Indivisible dimensions fall through the chain and end replicated — e.g. MQA
+KV heads (kv=1) stay replicated while Q heads shard, exactly the GQA rule in
+DESIGN.md §5.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Params = Any
+
+# (tensor-dim chain, fsdp-dim chain) per leaf name; dims are negative axes
+# of the CANONICAL (unstacked) leaf. `None` chain = never shard that way.
+_RULES: Dict[str, Tuple[Tuple[int, ...], Tuple[int, ...]]] = {
+    # embedding / unembedding (V, d): vocab over model.  NO FSDP dim: a
+    # data-sharded d makes the unembed einsum contract over a sharded dim
+    # while the batch is also data-sharded — XLA then materialises FULL
+    # (B, S, V) logits per device (measured 3×53 GB on llama4, §Perf it. 4).
+    "embedding": ((-2, -1), ()),
+    "unembedding": ((-2, -1), ()),
+    # attention (also mlstm q/k/v): (d, H, dh) / (d, KV, dh).
+    # Head dims shard ONLY when divisible; the fallback is REPLICATION, not
+    # head-dim (dh) sharding — a dh-sharded K/V makes every attention-score
+    # einsum contract over a sharded dim, all-reducing the full (Q, S)
+    # score matrix (measured 3×15 GB per layer on yi-34b, §Perf it. 2).
+    "wq": ((-2,), (-3,)),
+    "wk": ((-2,), (-3,)),
+    "wv": ((-2,), (-3,)),
+    "wo": ((-3,), (-1,)),
+    # MLP family: up-projections (d, ff) and down-projections (ff, d).
+    # 3-D variants (MoE: (E, d, ff) / (E, ff, d)) hit the expert dim first.
+    "w_in": ((-4, -1), (-2,)),        # -4 never matches 2-D/3-D: see _MOE
+    "w_gate": ((-4, -1), (-2,)),
+    "w_out": ((-4, -2), (-1,)),
+    "w_up": ((-1,), (-2,)),
+    "w_up_main": ((-1,), (-2,)),
+    "w_up_gate": ((-1,), (-2,)),
+    "w_gate_branch": ((-1,), (-2,)),
+    "w_gates": ((-1,), (-2,)),
+    "w_down": ((-2,), (-1,)),
+    # RG-LRU square maps (dr, dr)
+    "w_a": ((-1,), (-2,)),
+    "w_x": ((-1,), (-2,)),
+    # depthwise conv (W, ch)
+    "conv_w": ((-1,), ()),
+    # sLSTM recurrent gates (4, nh, dh, dh)
+    "r_gates": ((-3, -1), ()),
+    # per-head gates (di, nh)
+    "w_igate": ((), (-2,)),
+    "w_fgate": ((), (-2,)),
+}
+
+# MoE 3-D leaves share names with dense MLP 2-D leaves; give the expert dim
+# priority when the leaf is 3-D.
+_MOE_RULES: Dict[str, Tuple[Tuple[int, ...], Tuple[int, ...]]] = {
+    "w_in": ((-3, -1), (-2,)),
+    "w_gate": ((-3, -1), (-2,)),
+    "w_out": ((-3, -2), (-1,)),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    """Which mesh axes play which logical role."""
+    batch: Tuple[str, ...]           # ("pod", "data") or ("data",)
+    fsdp: Tuple[str, ...]            # ("data",)
+    tensor: Tuple[str, ...]          # ("model",)
+
+
+def mesh_axes(mesh: Mesh) -> MeshAxes:
+    names = mesh.axis_names
+    if "pod" in names:
+        return MeshAxes(("pod", "data"), ("data",), ("model",))
+    return MeshAxes(("data",), ("data",), ("model",))
+
+
+def _axis_size(mesh: Mesh, axes: Sequence[str]) -> int:
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def spec_for_param(name: str, shape: Tuple[int, ...], mesh: Mesh,
+                   *, fsdp: bool = True) -> P:
+    """PartitionSpec for one param leaf by rule name + shape."""
+    ax = mesh_axes(mesh)
+    ndim = len(shape)
+    rules = _RULES.get(name)
+    if name in _MOE_RULES and ndim >= 3:
+        rules = _MOE_RULES[name]
+    spec: list = [None] * ndim
+    if rules is None:
+        return P(*spec)
+    tensor_chain, fsdp_chain = rules
+    t_size = _axis_size(mesh, ax.tensor)
+    f_size = _axis_size(mesh, ax.fsdp)
+    t_dim = None
+    for d in tensor_chain:
+        if -d <= ndim and shape[d] % t_size == 0:
+            t_dim = d % ndim
+            spec[t_dim] = ax.tensor if len(ax.tensor) > 1 else ax.tensor[0]
+            break
+    if t_dim is None and name in ("wq", "wk", "wv") and ndim >= 3:
+        # heads indivisible -> weights replicate over `model`; FSDP must
+        # then avoid the contraction dim d (else every projection all-
+        # reduces its full activation, §Perf it. 4) — shard dh instead.
+        fsdp_chain = (-1, -3)
+    if fsdp:
+        for d in fsdp_chain:
+            dd = d % ndim if -d <= ndim else None
+            if dd is not None and dd != t_dim and shape[d] % f_size == 0:
+                spec[dd] = ax.fsdp if len(ax.fsdp) > 1 else ax.fsdp[0]
+                break
+    return P(*spec)
+
+
+def _leaf_name(path) -> str:
+    last = path[-1]
+    return str(getattr(last, "key", getattr(last, "idx", last)))
+
+
+def tree_specs(shapes: Params, mesh: Mesh, *, fsdp: bool = True) -> Params:
+    """PartitionSpec pytree for a params pytree (of arrays or SDS)."""
+    def rule(path, leaf):
+        return spec_for_param(_leaf_name(path), tuple(leaf.shape), mesh,
+                              fsdp=fsdp)
+    return jax.tree_util.tree_map_with_path(rule, shapes)
+
+
+def param_shardings(shapes: Params, mesh: Mesh, *, fsdp: bool = True
+                    ) -> Params:
+    """NamedSharding pytree for a params pytree."""
+    specs = tree_specs(shapes, mesh, fsdp=fsdp)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Activations / inputs
+# ---------------------------------------------------------------------------
+
+def batch_axes(mesh: Mesh, global_batch: int) -> Optional[Tuple[str, ...]]:
+    """Longest prefix of the batch mesh axes that divides ``global_batch``.
+
+    long_500k (batch=1) ends fully replicated — DESIGN.md §5.
+    """
+    ax = mesh_axes(mesh)
+    chosen: Tuple[str, ...] = ()
+    size = 1
+    # prefer consuming the pod axis first so DP spans pods
+    for a in ax.batch:
+        if global_batch % (size * mesh.shape[a]) == 0:
+            chosen = chosen + (a,)
+            size *= mesh.shape[a]
+        else:
+            break
+    return chosen if chosen else None
+
+
+def cache_spec(shape: Tuple[int, ...], mesh: Mesh, batch: Tuple[str, ...] | None
+               ) -> P:
+    """KV/recurrent-state cache leaf: axis 1 is batch (axis 0 is the stacked
+    layer/rep axis).
+
+    For attention K/V (ndim ≥ 4) the SEQUENCE dim (-3) shards over ``model``
+    — flash-decoding style: attention scores are then per-shard partials and
+    only the (tiny) softmax statistics and output reduce across chips.
+    Sharding the head dim instead makes XLA all-gather the whole cache every
+    layer (measured 1.07 GB/layer on qwen3 decode_32k, §Perf iteration 3).
+    Recurrent states (ndim 3) shard their channel dim."""
+    ax = mesh_axes(mesh)
+    t_size = _axis_size(mesh, ax.tensor)
+    ndim = len(shape)
+    spec: list = [None] * ndim
+    if ndim >= 2:
+        b_dim = 1
+        if batch and shape[b_dim] % _axis_size(mesh, batch) == 0:
+            spec[b_dim] = batch if len(batch) > 1 else batch[0]
+        chain = (-3, -1, -2) if ndim >= 4 else (-1,)
+        for d in chain:
+            dd = d % ndim
+            if dd > b_dim and spec[dd] is None and shape[d] % t_size == 0:
+                spec[dd] = ax.tensor[0]
+                break
+    return P(*spec)
+
+
+def input_shardings(specs: Dict[str, Any], mesh: Mesh, global_batch: int
+                    ) -> Dict[str, Any]:
+    """NamedSharding for each entry of ``input_specs`` (train or decode)."""
+    b_ax = batch_axes(mesh, global_batch)
+    b_spec = (b_ax if b_ax and len(b_ax) > 1 else
+              (b_ax[0] if b_ax else None))
+
+    out: Dict[str, Any] = {}
+    for k, v in specs.items():
+        if k == "cache":
+            out[k] = jax.tree.map(
+                lambda l: NamedSharding(mesh, cache_spec(tuple(l.shape), mesh,
+                                                         b_ax)), v)
+        elif k == "index":
+            out[k] = NamedSharding(mesh, P())
+        else:
+            ndim = len(v.shape)
+            out[k] = NamedSharding(mesh, P(*([b_spec] + [None] * (ndim - 1))))
+    return out

@@ -1,0 +1,15 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests must see the single
+real CPU device; only the dry-run subprocess spawns 512 placeholders."""
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def key():
+    return jax.random.key(0)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,89 @@
+"""Hierarchical aggregation tests (paper Eqs. 11, 17) + staleness (Eq. 20)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregation, staleness
+
+
+def _stacked(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"w": jnp.asarray(rng.normal(size=(n, 3, 2)), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(n, 2)), jnp.float32)}
+
+
+def test_weighted_mean_matches_numpy():
+    p = _stacked(4)
+    w = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+    out = aggregation.weighted_mean(p, w)
+    want = np.average(np.asarray(p["w"]), axis=0, weights=np.asarray(w))
+    np.testing.assert_allclose(np.asarray(out["w"]), want, rtol=1e-6)
+
+
+def test_edge_aggregate_eq11():
+    p = _stacked(4)
+    assoc = jnp.asarray([[1., 0.], [1., 0.], [0., 1.], [0., 0.]])
+    d = jnp.asarray([100., 300., 500., 700.])
+    out = aggregation.edge_aggregate(p, assoc, d)
+    w = np.asarray(p["w"])
+    want0 = (100 * w[0] + 300 * w[1]) / 400
+    np.testing.assert_allclose(np.asarray(out["w"][0]), want0, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(out["w"][1]), w[2], rtol=1e-5)
+
+
+def test_hierarchical_equals_flat():
+    """Edge-then-cloud == one flat data-weighted average when every edge is
+    selected — the sanity identity of the client→edge→cloud hierarchy."""
+    n, m = 6, 2
+    p = _stacked(n, seed=1)
+    assoc = jnp.asarray([[1., 0.], [1., 0.], [1., 0.],
+                         [0., 1.], [0., 1.], [0., 1.]])
+    d = jnp.asarray([1., 2., 3., 4., 5., 6.]) * 100
+    edge = aggregation.edge_aggregate(p, assoc, d)
+    edge_data = jnp.sum(assoc * d[:, None], axis=0)
+    cloud = aggregation.cloud_aggregate(edge, jnp.ones((m,)), edge_data)
+    flat = aggregation.weighted_mean(p, d)
+    np.testing.assert_allclose(np.asarray(cloud["w"]), np.asarray(flat["w"]),
+                               rtol=1e-5)
+
+
+def test_cloud_aggregate_mask():
+    m = 3
+    p = _stacked(m)
+    z = jnp.asarray([1.0, 0.0, 1.0])
+    d = jnp.asarray([100.0, 100.0, 300.0])
+    out = aggregation.cloud_aggregate(p, z, d)
+    w = np.asarray(p["w"])
+    want = (100 * w[0] + 300 * w[2]) / 400
+    np.testing.assert_allclose(np.asarray(out["w"]), want, rtol=1e-5)
+
+
+def test_broadcast_to_clients():
+    n, m = 3, 2
+    edge = _stacked(m)
+    client = _stacked(n, seed=2)
+    assoc = jnp.asarray([[1., 0.], [0., 1.], [0., 0.]])
+    out = aggregation.broadcast_to_clients(None, assoc, edge, client)
+    np.testing.assert_allclose(np.asarray(out["w"][0]),
+                               np.asarray(edge["w"][0]))
+    np.testing.assert_allclose(np.asarray(out["w"][1]),
+                               np.asarray(edge["w"][1]))
+    # unassociated client keeps its own params
+    np.testing.assert_allclose(np.asarray(out["w"][2]),
+                               np.asarray(client["w"][2]))
+
+
+def test_replicate():
+    p = {"w": jnp.ones((2, 2))}
+    out = aggregation.replicate(p, 5)
+    assert out["w"].shape == (5, 2, 2)
+
+
+def test_staleness_eq20():
+    s = staleness.init_staleness(4)
+    np.testing.assert_array_equal(np.asarray(s), [1, 1, 1, 1])
+    s = staleness.update_staleness(s, jnp.asarray([True, False, False, True]))
+    np.testing.assert_array_equal(np.asarray(s), [1, 2, 2, 1])
+    s = staleness.update_staleness(s, jnp.asarray([False, False, True, True]))
+    np.testing.assert_array_equal(np.asarray(s), [2, 3, 1, 1])

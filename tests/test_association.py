@@ -1,0 +1,78 @@
+"""Client-edge association policy tests (paper §III-B last paragraph)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import association
+
+
+def _setup(n=12, m=3, seed=0):
+    rng = np.random.default_rng(seed)
+    dist = rng.uniform(10.0, 400.0, (n, m))
+    scores = rng.uniform(0.0, 100.0, n)
+    gains = rng.uniform(0.0, 1.0, (n, m)) * 1e-9
+    return rng, dist, scores, gains
+
+
+def test_fcea_quota_and_uniqueness():
+    rng, dist, scores, _ = _setup()
+    assoc = association.fcea(scores, dist, quota=3, coverage_radius_m=500.0)
+    assert assoc.shape == (12, 3)
+    assert (assoc.sum(axis=1) <= 1).all()          # one edge per client
+    assert (assoc.sum(axis=0) <= 3).all()          # quota per edge
+
+
+def test_fcea_prefers_high_scores():
+    dist = np.full((4, 1), 100.0)
+    scores = np.asarray([10.0, 90.0, 50.0, 70.0])
+    assoc = association.fcea(scores, dist, quota=2, coverage_radius_m=500.0)
+    chosen = set(np.where(assoc[:, 0] == 1)[0].tolist())
+    assert chosen == {1, 3}
+
+
+def test_conflict_resolves_to_nearest():
+    """A doubly-wanted client goes to the nearer edge; the loser refills."""
+    # 3 clients, 2 edges, quota 1; client 0 best for both, nearer to edge 1
+    scores = np.asarray([[90.0, 90.0], [50.0, 10.0], [10.0, 50.0]])
+    dist = np.asarray([[200.0, 50.0], [100.0, 100.0], [100.0, 100.0]])
+    assoc = association.fcea(scores, dist, quota=1, coverage_radius_m=500.0)
+    assert assoc[0, 1] == 1            # client 0 -> nearer edge 1
+    assert assoc[1, 0] == 1            # edge 0 refills with its next best
+
+
+def test_coverage_respected():
+    scores = np.asarray([90.0, 80.0])
+    dist = np.asarray([[600.0], [100.0]])
+    assoc = association.fcea(scores, dist, quota=2, coverage_radius_m=500.0)
+    assert assoc[0, 0] == 0 and assoc[1, 0] == 1
+
+
+def test_gcea_picks_strongest_channel():
+    dist = np.full((3, 1), 100.0)
+    gains = np.asarray([[1e-9], [5e-9], [3e-9]])
+    assoc = association.gcea(gains, dist, quota=1, coverage_radius_m=500.0)
+    assert assoc[1, 0] == 1 and assoc.sum() == 1
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(4, 20), st.integers(1, 4), st.integers(1, 5),
+       st.integers(0, 1000))
+def test_invariants_all_policies(n, m, quota, seed):
+    rng, dist, scores, gains = _setup(n, m, seed)
+    for policy in ("fcea", "gcea", "rcea"):
+        assoc = association.associate(
+            policy, scores=scores, gains_to_edges=gains, dist=dist,
+            quota=quota, coverage_radius_m=500.0, rng=rng)
+        assert (assoc.sum(axis=1) <= 1).all()
+        assert (assoc.sum(axis=0) <= quota).all()
+        # every associated client is in coverage
+        taken = np.argwhere(assoc == 1)
+        for c, e in taken:
+            assert dist[c, e] <= 500.0
+
+
+def test_per_edge_scores_matrix_accepted():
+    rng, dist, _, gains = _setup()
+    scores2d = rng.uniform(0.0, 100.0, dist.shape)
+    assoc = association.fcea(scores2d, dist, quota=2, coverage_radius_m=500.0)
+    assert assoc.shape == dist.shape

@@ -1,0 +1,124 @@
+"""Cost-model closed-form tests (paper Eqs. 3-5, 9-19, 23a)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.hfl_mnist import CONFIG as HFL
+from repro.core import cost, noma
+
+
+def test_tau_formulas():
+    """Eq. 3 and Eq. 12 with θ=ξ=0.5, μ=δ=2."""
+    import math
+    assert HFL.tau1 == max(1, round(2.0 * math.log(2.0)))
+    assert HFL.tau2 == max(1, round(2.0 * math.log(2.0) / 0.5))
+
+
+def test_local_compute_eq_4_5():
+    f = jnp.asarray([2e9])
+    d = jnp.asarray([500.0])
+    t, e = cost.local_compute(HFL, f, d)
+    tau1 = HFL.tau1
+    assert float(t[0]) == pytest.approx(tau1 * 1e7 * 500 / 2e9)
+    assert float(e[0]) == pytest.approx(tau1 * 0.5e-28 * (2e9) ** 2 * 1e7 * 500)
+
+
+def test_uplink_eq_9_10_single_client():
+    """One client, one edge: no interference -> Shannon SNR rate."""
+    p = jnp.asarray([0.1])
+    gains = jnp.asarray([[1e-9]])
+    assoc = jnp.asarray([[1.0]])
+    t_com, e_com, rates = cost.uplink(HFL, p, gains, assoc)
+    noise = noma.noise_power_w(HFL.noise_dbm_per_hz, HFL.bandwidth_hz)
+    want_rate = HFL.bandwidth_hz * np.log2(1 + 0.1 * 1e-9 / noise)
+    assert float(rates[0]) == pytest.approx(want_rate, rel=1e-6)
+    assert float(t_com[0]) == pytest.approx(HFL.model_size_bits / want_rate,
+                                            rel=1e-6)
+    assert float(e_com[0]) == pytest.approx(0.1 * float(t_com[0]), rel=1e-6)
+
+
+def test_unassociated_clients_cost_nothing():
+    p = jnp.asarray([0.1, 0.1])
+    gains = jnp.asarray([[1e-9], [1e-9]])
+    assoc = jnp.asarray([[1.0], [0.0]])
+    t_com, e_com, _ = cost.uplink(HFL, p, gains, assoc)
+    assert float(t_com[1]) == 0.0 and float(e_com[1]) == 0.0
+
+
+def test_round_cost_max_and_sum_semantics():
+    """Eq. 13 (max over clients), Eq. 14 (sum), Eqs. 18-19 (masked max/sum)."""
+    n, m = 4, 2
+    p = jnp.full((n,), 0.05)
+    f = jnp.full((n,), 5e9)
+    gains = jnp.full((n, m), 1e-9)
+    assoc = jnp.asarray([[1., 0.], [1., 0.], [0., 1.], [0., 1.]])
+    d = jnp.asarray([400., 800., 400., 800.])
+    z = jnp.asarray([1.0, 1.0])
+    rc = cost.round_cost(HFL, power_w=p, f_hz=f, gains=gains, assoc=assoc,
+                         z=z, n_samples=d)
+    # per-edge time is τ₂ × slowest client + cloud upload (Eq. 13);
+    # SIC decode order makes "slowest" a NOMA matter, so take the max.
+    t_cloud = HFL.edge_model_size_bits / HFL.edge_rate_bps
+    slowest = float(jnp.max(rc.client_time_s[:2]))  # edge 0's clients
+    assert float(rc.per_edge_time_s[0]) == pytest.approx(
+        HFL.tau2 * slowest + t_cloud, rel=1e-5)
+    assert float(rc.total_time_s) == pytest.approx(
+        float(jnp.max(rc.per_edge_time_s)), rel=1e-6)
+    assert float(rc.total_energy_j) == pytest.approx(
+        float(jnp.sum(rc.per_edge_energy_j)), rel=1e-6)
+    want = HFL.lambda_t * rc.total_time_s + HFL.lambda_e * rc.total_energy_j
+    assert float(rc.cost) == pytest.approx(float(want), rel=1e-6)
+
+
+def test_semi_sync_mask_drops_edges():
+    n, m = 2, 2
+    p = jnp.full((n,), 0.05)
+    f = jnp.full((n,), 5e9)
+    gains = jnp.full((n, m), 1e-9)
+    assoc = jnp.asarray([[1., 0.], [0., 1.]])
+    d = jnp.full((n,), 500.0)
+    rc_all = cost.round_cost(HFL, power_w=p, f_hz=f, gains=gains, assoc=assoc,
+                             z=jnp.asarray([1., 1.]), n_samples=d)
+    rc_one = cost.round_cost(HFL, power_w=p, f_hz=f, gains=gains, assoc=assoc,
+                             z=jnp.asarray([1., 0.]), n_samples=d)
+    assert float(rc_one.total_energy_j) < float(rc_all.total_energy_j)
+
+
+def test_oma_slower_than_noma_per_round():
+    """With K clients sharing the band, OMA rates are lower (1/K bandwidth)
+    at moderate SNR -> longer upload time (the paper's Fig. 8-11 driver)."""
+    n, m = 4, 1
+    p = jnp.full((n,), 0.05)
+    f = jnp.full((n,), 5e9)
+    gains = jnp.asarray([[4e-9], [3e-9], [2e-9], [1e-9]])
+    assoc = jnp.ones((n, m))
+    d = jnp.full((n,), 500.0)
+    z = jnp.ones((m,))
+    rc_noma = cost.round_cost(HFL, power_w=p, f_hz=f, gains=gains,
+                              assoc=assoc, z=z, n_samples=d,
+                              noma_enabled=True)
+    rc_oma = cost.round_cost(HFL, power_w=p, f_hz=f, gains=gains,
+                             assoc=assoc, z=z, n_samples=d,
+                             noma_enabled=False)
+    assert float(jnp.sum(rc_noma.rates_bps)) > float(jnp.sum(rc_oma.rates_bps))
+
+
+def test_cost_differentiable_in_p_f():
+    """DDPG relies on a smooth cost surface."""
+    import jax
+    n, m = 3, 1
+    gains = jnp.asarray([[1e-9], [2e-9], [3e-9]])
+    assoc = jnp.ones((n, m))
+    d = jnp.full((n,), 500.0)
+    z = jnp.ones((m,))
+
+    def total(pf):
+        p, f = pf[:n], pf[n:]
+        rc = cost.round_cost(HFL, power_w=p, f_hz=f, gains=gains,
+                             assoc=assoc, z=z, n_samples=d)
+        return rc.cost
+
+    g = jax.grad(total)(jnp.concatenate([jnp.full((n,), 0.05),
+                                         jnp.full((n,), 5e9)]))
+    assert np.isfinite(np.asarray(g)).all()
+    assert float(jnp.abs(g).max()) > 0

@@ -1,0 +1,153 @@
+"""Data pipeline, optimizer, and checkpoint substrate tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import checkpoint
+from repro.data import federated, synthetic, tokens
+from repro.optim import (adam, adamw, clip_by_global_norm, cosine_decay,
+                         global_norm, linear_warmup, momentum, sgd,
+                         warmup_cosine)
+
+
+# -- data ---------------------------------------------------------------------
+
+def test_partitioner_conservation_iid(rng):
+    fd = federated.make_federated(rng, n_clients=8, dim=16, iid=True,
+                                  min_samples=20, max_samples=50,
+                                  test_samples=30)
+    assert fd.x.shape == (8, 50, 16)
+    for c in range(8):
+        n = fd.counts[c]
+        assert (fd.x[c, n:] == 0).all()          # padding zeroed
+        assert np.abs(fd.x[c, :n]).sum() > 0     # data present
+
+
+def test_partitioner_noniid_skew(rng):
+    fd = federated.make_federated(rng, n_clients=8, dim=16, iid=False,
+                                  min_samples=50, max_samples=100,
+                                  dirichlet_alpha=0.1, test_samples=30)
+    # with α=0.1 clients should be label-skewed: few distinct labels dominate
+    fracs = []
+    for c in range(8):
+        y = fd.y[c, :fd.counts[c]]
+        _, counts = np.unique(y, return_counts=True)
+        fracs.append(counts.max() / counts.sum())
+    assert np.mean(fracs) > 0.35
+
+
+def test_classification_learnable(rng):
+    x, y = synthetic.make_classification(rng, n_samples=500, dim=32,
+                                         noise=0.5)
+    # nearest-template accuracy must beat chance by a wide margin
+    assert x.shape == (500, 32) and y.shape == (500,)
+    assert len(np.unique(y)) == 10
+
+
+def test_token_batches(rng):
+    bs = list(tokens.token_batches(rng, vocab=100, batch=4, seq_len=16,
+                                   n_batches=3))
+    assert len(bs) == 3
+    for b in bs:
+        assert b["tokens"].shape == (4, 16)
+        np.testing.assert_array_equal(b["labels"][:, :-1], b["tokens"][:, 1:])
+        assert b["tokens"].max() < 100
+
+
+# -- optimizers ---------------------------------------------------------------
+
+def _quadratic(params):
+    return sum(jnp.sum(jnp.square(l)) for l in jax.tree.leaves(params))
+
+
+@pytest.mark.parametrize("factory", [
+    lambda: sgd(0.1), lambda: momentum(0.05), lambda: adam(0.1),
+    lambda: adamw(0.1, weight_decay=0.0)])
+def test_optimizer_reduces_quadratic(factory):
+    opt = factory()
+    params = {"w": jnp.asarray([3.0, -2.0]), "b": jnp.asarray([[1.0, 4.0]])}
+    state = opt.init(params)
+    step = jnp.zeros((), jnp.int32)
+    start = float(_quadratic(params))
+    for i in range(50):
+        grads = jax.grad(_quadratic)(params)
+        params, state = opt.update(grads, state, params, step)
+        step = step + 1
+    assert float(_quadratic(params)) < 0.05 * start
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(0.5, 5.0), st.integers(0, 100))
+def test_adam_step_bounded(scale, seed):
+    """Adam's per-step move is bounded by ~lr regardless of grad scale."""
+    rng = np.random.default_rng(seed)
+    params = {"w": jnp.asarray(rng.normal(size=4), jnp.float32)}
+    opt = adam(0.01)
+    state = opt.init(params)
+    grads = {"w": jnp.asarray(scale * rng.normal(size=4), jnp.float32)}
+    new, _ = opt.update(grads, state, params, jnp.zeros((), jnp.int32))
+    move = np.abs(np.asarray(new["w"]) - np.asarray(params["w"]))
+    assert (move <= 0.011).all()
+
+
+def test_clip_by_global_norm():
+    t = {"a": jnp.asarray([3.0, 4.0])}          # norm 5
+    c = clip_by_global_norm(t, 1.0)
+    assert float(global_norm(c)) == pytest.approx(1.0, rel=1e-5)
+    c2 = clip_by_global_norm(t, 10.0)           # under the cap: unchanged
+    np.testing.assert_allclose(np.asarray(c2["a"]), [3.0, 4.0])
+
+
+def test_schedules():
+    s = linear_warmup(1.0, 10)
+    assert float(s(jnp.asarray(0))) == pytest.approx(0.1)
+    assert float(s(jnp.asarray(9))) == pytest.approx(1.0)
+    c = cosine_decay(1.0, 100, final_frac=0.1)
+    assert float(c(jnp.asarray(0))) == pytest.approx(1.0)
+    assert float(c(jnp.asarray(100))) == pytest.approx(0.1)
+    wc = warmup_cosine(1.0, 10, 100)
+    assert float(wc(jnp.asarray(5))) < 1.0
+    assert float(wc(jnp.asarray(10))) == pytest.approx(1.0)
+
+
+def test_adam_bf16_moments():
+    opt = adam(0.01, opt_dtype="bfloat16")
+    params = {"w": jnp.ones((4,), jnp.float32)}
+    state = opt.init(params)
+    assert state["m"]["w"].dtype == jnp.bfloat16
+    grads = {"w": jnp.ones((4,), jnp.float32)}
+    new, state = opt.update(grads, state, params, jnp.zeros((), jnp.int32))
+    assert new["w"].dtype == jnp.float32
+    assert np.isfinite(np.asarray(new["w"])).all()
+
+
+# -- checkpoint ---------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path, key):
+    tree = {"layer": {"w": jax.random.normal(key, (3, 4)),
+                      "b": jnp.zeros((4,), jnp.bfloat16)},
+            "stack": [jnp.arange(5), jnp.ones((2, 2), jnp.int32)]}
+    checkpoint.save_checkpoint(str(tmp_path), 7, tree, extra={"loss": 1.5})
+    out, step, extra = checkpoint.load_checkpoint(str(tmp_path), tree)
+    assert step == 7 and extra["loss"] == 1.5
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        assert str(np.asarray(a).dtype) == str(np.asarray(b).dtype)
+        np.testing.assert_array_equal(
+            np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+
+def test_checkpoint_latest(tmp_path):
+    tree = {"w": jnp.ones((2,))}
+    for s in (1, 5, 3):
+        checkpoint.save_checkpoint(str(tmp_path), s, tree)
+    assert checkpoint.latest_step(str(tmp_path)) == 5
+    _, step, _ = checkpoint.load_checkpoint(str(tmp_path), tree)
+    assert step == 5
+
+
+def test_checkpoint_missing_dir(tmp_path):
+    assert checkpoint.latest_step(str(tmp_path / "nope")) is None
+    with pytest.raises(FileNotFoundError):
+        checkpoint.load_checkpoint(str(tmp_path / "nope"), {"w": jnp.ones(1)})

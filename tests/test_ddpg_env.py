@@ -1,0 +1,117 @@
+"""DDPG + environment tests (paper §IV-C, Algorithm 2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.hfl_mnist import CONFIG as HFL
+from repro.core import ddpg, env
+
+
+def _env(n=6, m=2, seed=0):
+    rng = np.random.default_rng(seed)
+    assoc = np.zeros((n, m))
+    for i in range(n):
+        assoc[i, i % m] = 1.0
+    dist = rng.uniform(50.0, 300.0, (n, m))
+    counts = rng.integers(200, 1200, n).astype(np.float32)
+    return env.NomaHflEnv(HFL, jnp.asarray(assoc, jnp.float32),
+                          jnp.ones((m,)), jnp.asarray(dist),
+                          jnp.asarray(counts))
+
+
+def test_env_reset_step(key):
+    e = _env()
+    state, obs = e.reset(key)
+    assert obs.shape == (e.state_dim,)
+    act = jnp.full((e.action_dim,), 0.5)
+    state2, obs2, reward, rc = e.step(state, act)
+    assert float(reward) == pytest.approx(-float(rc.cost))
+    assert np.isfinite(np.asarray(obs2)).all()
+    # channel evolved
+    assert not np.allclose(np.asarray(state.gains), np.asarray(state2.gains))
+
+
+def test_decode_action_bounds():
+    e = _env()
+    p, f = e.decode_action(jnp.zeros((e.action_dim,)))
+    assert float(p.min()) == pytest.approx(HFL.p_min_w)
+    assert float(f.min()) == pytest.approx(HFL.f_min_hz)
+    p, f = e.decode_action(jnp.ones((e.action_dim,)))
+    assert float(p.max()) == pytest.approx(HFL.p_max_w)
+    assert float(f.max()) == pytest.approx(HFL.f_max_hz)
+
+
+def test_networks_shapes(key):
+    cfg = ddpg.DDPGConfig(state_dim=12, action_dim=12, hidden=32,
+                          buffer_size=128, batch_size=16)
+    st = ddpg.init_ddpg(key, cfg)
+    s = jnp.zeros((12,))
+    a = ddpg.actor_apply(st.actor, s)
+    assert a.shape == (12,)
+    assert float(a.min()) >= 0.0 and float(a.max()) <= 1.0
+    q = ddpg.critic_apply(st.critic, s, a)
+    assert q.shape == ()
+
+
+def test_replay_ring(key):
+    cfg = ddpg.DDPGConfig(state_dim=2, action_dim=2, buffer_size=4,
+                          batch_size=2)
+    st = ddpg.init_ddpg(key, cfg)
+    for i in range(6):
+        st = ddpg.store(st, cfg, jnp.full((2,), float(i)), jnp.zeros((2,)),
+                        jnp.asarray(float(i)), jnp.zeros((2,)))
+    assert bool(st.buffer_full)
+    assert int(st.buffer_idx) == 2
+    # slots hold the most recent 4 rewards {2,3,4,5}
+    assert sorted(np.asarray(st.buffer["r"]).tolist()) == [2.0, 3.0, 4.0, 5.0]
+
+
+def test_train_step_updates_and_targets_move(key):
+    cfg = ddpg.DDPGConfig(state_dim=4, action_dim=2, hidden=32,
+                          buffer_size=64, batch_size=16, tau=0.5)
+    st = ddpg.init_ddpg(key, cfg)
+    rng = np.random.default_rng(0)
+    for i in range(32):
+        s = jnp.asarray(rng.normal(size=4), jnp.float32)
+        a = jnp.asarray(rng.uniform(size=2), jnp.float32)
+        r = jnp.asarray(-float(np.sum(np.asarray(a) ** 2)))
+        st = ddpg.store(st, cfg, s, a, r, s)
+    t0 = jax.tree.leaves(st.target_actor)[0].copy()
+    a0 = jax.tree.leaves(st.actor)[0].copy()
+    st2, metrics = ddpg.train_step(key, st, cfg)
+    assert np.isfinite(float(metrics["critic_loss"]))
+    assert not np.allclose(a0, jax.tree.leaves(st2.actor)[0])
+    assert not np.allclose(t0, jax.tree.leaves(st2.target_actor)[0])
+    # soft update: target moved toward online, not equal to it
+    assert not np.allclose(jax.tree.leaves(st2.target_actor)[0],
+                           jax.tree.leaves(st2.actor)[0])
+
+
+def test_ddpg_learns_simple_env(key):
+    """Reward = -(a - 0.7)²: the actor should move its mean action to 0.7."""
+    cfg = ddpg.DDPGConfig(state_dim=2, action_dim=1, hidden=32,
+                          actor_lr=3e-3, critic_lr=3e-3,
+                          buffer_size=512, batch_size=32, noise_sigma=0.3)
+    st = ddpg.init_ddpg(key, cfg)
+    rng = np.random.default_rng(0)
+    k = key
+    obs = jnp.zeros((2,))
+    for i in range(400):
+        k, ka, kt = jax.random.split(k, 3)
+        a = ddpg.select_action(ka, st, obs)
+        r = -float((np.asarray(a)[0] - 0.7) ** 2)
+        st = ddpg.store(st, cfg, obs, a, jnp.asarray(r), obs)
+        if i > 64:
+            st, _ = ddpg.train_step(kt, st, cfg)
+    final = float(ddpg.actor_apply(st.actor, obs)[0])
+    assert abs(final - 0.7) < 0.2
+
+
+def test_baseline_allocators():
+    a = env.rra_action(jax.random.key(0), 4)
+    assert a.shape == (8,) and float(a.min()) >= 0 and float(a.max()) <= 1
+    a = env.fpa_action(4, jnp.full((4,), 0.3))
+    np.testing.assert_allclose(np.asarray(a[:4]), 0.5)
+    a = env.fca_action(4, jnp.full((4,), 0.3))
+    np.testing.assert_allclose(np.asarray(a[4:]), 0.5)

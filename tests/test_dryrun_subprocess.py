@@ -1,0 +1,47 @@
+"""Dry-run smoke in a SUBPROCESS so the 512-placeholder-device XLA flag
+never leaks into this test process (assignment requirement)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json
+import jax
+from repro.configs import get_config
+from repro.launch.dryrun import lower_pair
+from repro.launch.mesh import make_production_mesh
+
+assert len(jax.devices()) == 512
+
+# reduced config through the REAL production meshes (both of them)
+cfg = get_config("stablelm-1.6b").reduced()
+for mp in (False, True):
+    rec = lower_pair("stablelm-1.6b", "train_4k", multi_pod=mp,
+                     cfg_override=cfg)
+    assert rec["status"] == "compiled", rec
+    print(json.dumps({"mesh": rec["mesh"], "status": rec["status"]}))
+"""
+
+
+@pytest.mark.slow
+def test_dryrun_production_meshes():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    lines = [json.loads(l) for l in out.stdout.strip().splitlines()
+             if l.startswith("{")]
+    meshes = {l["mesh"] for l in lines}
+    assert meshes == {"16x16", "2x16x16"}
+
+
+def test_main_process_sees_one_device():
+    import jax
+    assert len(jax.devices()) == 1

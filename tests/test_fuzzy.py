@@ -1,0 +1,115 @@
+"""Fuzzy client-scoring unit + property tests (paper §III, Table I, Fig. 4)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fuzzy
+
+
+def test_membership_peaks():
+    # at v=0: fully 'weak'; at 50: fully 'medium'; at 100: fully 'strong'
+    for v, idx in [(0.0, 0), (50.0, 1), (100.0, 2)]:
+        m = np.asarray(fuzzy.input_memberships(jnp.asarray(v)))
+        assert m[idx] == pytest.approx(1.0)
+        assert m.sum() == pytest.approx(1.0)  # triangles overlap-partition
+
+
+def test_membership_halfway():
+    m = np.asarray(fuzzy.input_memberships(jnp.asarray(25.0)))
+    assert m[0] == pytest.approx(0.5) and m[1] == pytest.approx(0.5)
+
+
+def test_normalize_eq21():
+    v = jnp.asarray([0.0, 5.0, 10.0])
+    nv = np.asarray(fuzzy.normalize(v, 10.0))
+    np.testing.assert_allclose(nv, [0.0, 50.0, 100.0])
+
+
+def test_rule_table_corners():
+    """Pure corners fire exactly one rule — spot-check Table I."""
+    cases = [  # (cq, dq, ms) -> output set
+        ((100.0, 100.0, 100.0), fuzzy.EXCELLENT),   # rule 9
+        ((100.0, 0.0, 0.0), fuzzy.FAIR),            # rule 1
+        ((0.0, 0.0, 0.0), fuzzy.POOR),              # rule 19
+        ((0.0, 100.0, 100.0), fuzzy.GOOD),          # rule 27
+        ((50.0, 50.0, 50.0), fuzzy.AVG),            # rule 14
+    ]
+    for (cq, dq, ms), want in cases:
+        s = np.asarray(fuzzy.rule_strengths(jnp.asarray(cq), jnp.asarray(dq),
+                                            jnp.asarray(ms)))
+        assert s.argmax() == want and s.max() == pytest.approx(1.0)
+
+
+def test_paper_worked_example():
+    """Paper Fig. 7: input (0.2, 0.5, 0.8) normalised = (20, 50, 80) —
+    weak/average/stale dominates -> rule 24 -> 'average' output."""
+    s = np.asarray(fuzzy.rule_strengths(jnp.asarray(20.0), jnp.asarray(50.0),
+                                        jnp.asarray(80.0)))
+    assert s.argmax() == fuzzy.AVG
+    out = float(fuzzy.fuzzy_score(jnp.asarray(20.0), jnp.asarray(50.0),
+                                  jnp.asarray(80.0)))
+    # COG of an 'average'-dominated aggregate sits near the centre (50)
+    assert 35.0 <= out <= 65.0
+
+
+def test_extremes_order():
+    best = float(fuzzy.fuzzy_score(jnp.asarray(100.0), jnp.asarray(100.0),
+                                   jnp.asarray(100.0)))
+    worst = float(fuzzy.fuzzy_score(jnp.asarray(0.0), jnp.asarray(0.0),
+                                    jnp.asarray(0.0)))
+    assert best > 80.0 and worst < 20.0
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.floats(0, 100), st.floats(0, 100), st.floats(0, 100))
+def test_output_bounded(cq, dq, ms):
+    out = float(fuzzy.fuzzy_score(jnp.asarray(cq), jnp.asarray(dq),
+                                  jnp.asarray(ms)))
+    assert 0.0 <= out <= 100.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(0, 100), st.floats(0, 100),
+       st.floats(0, 90), st.floats(1, 10))
+def test_monotone_in_staleness(cq, dq, ms, delta):
+    """Table I is monotone non-decreasing in every criterion.  Mamdani
+    clip + COG introduces sub-unit ripples at membership crossovers (a
+    known fuzzy-control artifact, not a rule-table bug) — bound them."""
+    lo = float(fuzzy.fuzzy_score(jnp.asarray(cq), jnp.asarray(dq),
+                                 jnp.asarray(ms)))
+    hi = float(fuzzy.fuzzy_score(jnp.asarray(cq), jnp.asarray(dq),
+                                 jnp.asarray(min(ms + delta, 100.0))))
+    assert hi >= lo - 1.5      # observed ripple ≈0.51 near crossovers
+
+
+def test_monotone_on_membership_grid():
+    """Exact monotonicity holds on the membership-aligned grid where at
+    most the rule weights, not the clip geometry, change."""
+    grid = [0.0, 50.0, 100.0]
+    for cq in grid:
+        for dq in grid:
+            vals = [float(fuzzy.fuzzy_score(jnp.asarray(cq), jnp.asarray(dq),
+                                            jnp.asarray(ms))) for ms in grid]
+            assert vals == sorted(vals)
+
+
+def test_vectorised_matches_scalar():
+    cq = jnp.asarray([10.0, 60.0, 90.0])
+    dq = jnp.asarray([40.0, 70.0, 20.0])
+    ms = jnp.asarray([80.0, 10.0, 55.0])
+    vec = np.asarray(fuzzy.fuzzy_scores(cq, dq, ms))
+    for i in range(3):
+        s = float(fuzzy.fuzzy_score(cq[i], dq[i], ms[i]))
+        assert vec[i] == pytest.approx(s, abs=1e-5)
+
+
+def test_score_clients_end_to_end():
+    g = jnp.asarray([1e-9, 5e-9, 1e-8])
+    d = jnp.asarray([200.0, 600.0, 1200.0])
+    s = jnp.asarray([1.0, 3.0, 9.0])
+    out = np.asarray(fuzzy.score_clients(g, d, s, gain_max=1e-8,
+                                         data_max=1200.0, staleness_max=9.0))
+    assert out.shape == (3,)
+    assert (out >= 0).all() and (out <= 100).all()
+    assert out[2] == out.max()  # best on all three criteria

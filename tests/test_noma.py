@@ -1,0 +1,88 @@
+"""NOMA SIC/SINR unit + property tests (paper §II-A2, Eqs. 6-10)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import noma
+
+B = 1e6
+NOISE = noma.noise_power_w(-174.0, B)
+
+
+def test_sinr_two_users_closed_form():
+    """Eq. 7 for K=2: strongest sees the other as interference, weakest
+    only noise."""
+    p = jnp.asarray([0.1, 0.05])
+    g = jnp.asarray([1e-9, 1e-9])
+    sinr = np.asarray(noma.sic_sinr(p, g, NOISE))
+    rx = np.asarray(p * g)
+    assert sinr[0] == pytest.approx(rx[0] / (rx[1] + NOISE), rel=1e-6)
+    assert sinr[1] == pytest.approx(rx[1] / NOISE, rel=1e-6)
+
+
+def test_sinr_order_invariance():
+    """Decode order is by received power, not input order."""
+    p = jnp.asarray([0.05, 0.1])
+    g = jnp.asarray([1e-9, 1e-9])
+    sinr = np.asarray(noma.sic_sinr(p, g, NOISE))
+    rx = np.asarray(p * g)
+    # client 1 is stronger -> decoded first -> sees client 0's interference
+    assert sinr[1] == pytest.approx(rx[1] / (rx[0] + NOISE), rel=1e-6)
+    assert sinr[0] == pytest.approx(rx[0] / NOISE, rel=1e-6)
+
+
+def test_mask_zeroes_absent_clients():
+    p = jnp.asarray([0.1, 0.1, 0.1])
+    g = jnp.asarray([1e-9, 2e-9, 3e-9])
+    mask = jnp.asarray([True, False, True])
+    sinr = np.asarray(noma.sic_sinr(p, g, NOISE, mask))
+    assert sinr[1] == 0.0
+    # masked client contributes no interference
+    rx = np.asarray(p * g)
+    assert sinr[0] == pytest.approx(rx[0] / NOISE, rel=1e-6)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 6), st.integers(0, 10_000))
+def test_sic_sum_rate_identity(k, seed):
+    """Σ_k log2(1+SINR_k) == log2(1 + Σ p g / σ²) — SIC achieves the MAC
+    sum capacity exactly (the classic NOMA identity)."""
+    rng = np.random.default_rng(seed)
+    p = jnp.asarray(rng.uniform(0.01, 0.1, k))
+    g = jnp.asarray(rng.uniform(0.1, 10.0, k) * 1e-9)
+    rates = noma.achievable_rates(p, g, bandwidth_hz=B, noise_w=NOISE)
+    bound = noma.sum_rate_upper_bound(p, g, bandwidth_hz=B, noise_w=NOISE)
+    np.testing.assert_allclose(float(jnp.sum(rates)), float(bound), rtol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 6), st.integers(0, 10_000))
+def test_rates_positive_and_finite(k, seed):
+    rng = np.random.default_rng(seed)
+    p = jnp.asarray(rng.uniform(0.01, 0.1, k))
+    g = jnp.asarray(rng.uniform(0.01, 10.0, k) * 1e-9)
+    r = np.asarray(noma.achievable_rates(p, g, bandwidth_hz=B, noise_w=NOISE))
+    assert (r > 0).all() and np.isfinite(r).all()
+
+
+def test_rayleigh_gains_stats(key):
+    d = jnp.full((4000,), 100.0)
+    g = np.asarray(noma.rayleigh_gains(key, d, path_loss_exponent=3.76))
+    # unit-mean exponential fading on top of the path loss
+    pl = 100.0 ** -3.76
+    assert g.mean() == pytest.approx(pl, rel=0.1)
+    assert (g > 0).all()
+
+
+def test_evolve_gains_correlation(key):
+    d = jnp.full((2000,), 50.0)
+    k1, k2 = jax.random.split(key)
+    g0 = noma.rayleigh_gains(k1, d, path_loss_exponent=3.76)
+    g1 = noma.evolve_gains(k2, g0, d, path_loss_exponent=3.76, rho=0.9)
+    c = np.corrcoef(np.asarray(g0), np.asarray(g1))[0, 1]
+    assert c > 0.7   # strongly correlated fading
+    g_fresh = noma.evolve_gains(k2, g0, d, path_loss_exponent=3.76, rho=0.0)
+    c2 = np.corrcoef(np.asarray(g0), np.asarray(g_fresh))[0, 1]
+    assert abs(c2) < 0.2

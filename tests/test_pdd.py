@@ -1,0 +1,74 @@
+"""PDD edge-scheduling tests (paper §IV-B, Algorithm 1)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pdd
+
+
+def _problem(m=4, seed=0):
+    rng = np.random.default_rng(seed)
+    energy = jnp.asarray(rng.uniform(50.0, 200.0, m))
+    t_cloud = jnp.asarray(rng.uniform(0.01, 0.1, m))
+    U = jnp.asarray(rng.uniform(1.0, 5.0))
+    return energy, t_cloud, U
+
+
+def test_binary_feasibility():
+    """PDD converges to (near-)binary z: the z(1-z̃), z-z̃ residuals vanish."""
+    energy, t_cloud, U = _problem()
+    res = pdd.pdd_schedule(energy, t_cloud, U, lam_t=0.5, lam_e=0.5, quota=2)
+    assert float(res.residual) < 1e-2
+    zb = np.asarray(res.z_binary)
+    assert set(np.unique(zb)).issubset({0.0, 1.0})
+
+
+def test_quota_respected():
+    for quota in (1, 2, 3):
+        energy, t_cloud, U = _problem(m=5, seed=quota)
+        res = pdd.pdd_schedule(energy, t_cloud, U, lam_t=0.5, lam_e=0.5,
+                               quota=quota)
+        assert int(np.asarray(res.z_binary).sum()) == quota
+
+
+def test_picks_cheap_edges():
+    """With equal times, the quota goes to the lowest-energy edges."""
+    energy = jnp.asarray([100.0, 10.0, 100.0, 10.0])
+    t_cloud = jnp.full((4,), 0.05)
+    U = jnp.asarray(2.0)
+    res = pdd.pdd_schedule(energy, t_cloud, U, lam_t=0.0, lam_e=1.0, quota=2)
+    zb = np.asarray(res.z_binary)
+    assert zb[1] == 1.0 and zb[3] == 1.0
+
+
+def test_objective_not_worse_than_exhaustive():
+    """Against brute force over all z with Σz = quota (M small)."""
+    import itertools
+    energy, t_cloud, U = _problem(m=5, seed=7)
+    quota = 2
+    res = pdd.pdd_schedule(energy, t_cloud, U, lam_t=0.5, lam_e=0.5,
+                           quota=quota)
+    best = np.inf
+    for comb in itertools.combinations(range(5), quota):
+        z = np.zeros(5)
+        z[list(comb)] = 1.0
+        obj = 0.5 * np.max(z * np.asarray(t_cloud + U)) \
+            + 0.5 * np.sum(z * np.asarray(energy))
+        best = min(best, obj)
+    # PDD is a stationary-point method; accept within 20% of the optimum
+    assert float(res.objective) <= best * 1.2 + 1e-6
+
+
+def test_paper_literal_no_quota():
+    """quota=None recovers the paper's formulation (z=0 admissible)."""
+    energy, t_cloud, U = _problem()
+    res = pdd.pdd_schedule(energy, t_cloud, U, lam_t=0.5, lam_e=0.5,
+                           quota=None)
+    zb = np.asarray(res.z_binary)
+    assert set(np.unique(zb)).issubset({0.0, 1.0})
+
+
+def test_semi_sync_fastest():
+    t = jnp.asarray([3.0, 1.0, 2.0, 5.0])
+    z = np.asarray(pdd.semi_sync_fastest(t, 2))
+    assert z.tolist() == [0.0, 1.0, 1.0, 0.0]

@@ -1,0 +1,162 @@
+"""Sharding-rule and roofline-parser unit tests (no big meshes here;
+multi-device lowering is exercised by the dry-run subprocess test)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, get_config, input_specs
+from repro.launch import roofline as rl
+from repro.models import build_model
+from repro.sharding import batch_axes, cache_spec, spec_for_param, tree_specs
+
+
+class FakeMesh:
+    """Duck-typed mesh: only .axis_names and .shape are consulted."""
+    def __init__(self, shape_map):
+        self.axis_names = tuple(shape_map)
+        self.shape = dict(shape_map)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+POD = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_attention_rules():
+    # (d, H, dh) with H=32 divisible -> heads shard over model, d over data
+    assert spec_for_param("wq", (4096, 32, 128), MESH) \
+        == P("data", "model", None)
+    # GQA kv=8 not divisible by 16 -> REPLICATE over model (dh-sharding
+    # would all-reduce full score matrices, §Perf it. 2); FSDP moves to dh
+    # to keep the contraction dim d whole (§Perf it. 4)
+    assert spec_for_param("wk", (4096, 8, 128), MESH) \
+        == P(None, None, "data")
+    # MQA kv=1, dh=256
+    assert spec_for_param("wk", (2048, 1, 256), MESH) \
+        == P(None, None, "data")
+    assert spec_for_param("wo", (32, 128, 4096), MESH) \
+        == P("model", None, "data")
+    # indivisible heads (yi-34b 56H): Q replicated too, FSDP on dh
+    assert spec_for_param("wq", (7168, 56, 128), MESH) \
+        == P(None, None, "data")
+
+
+def test_stacked_leading_axis_untouched():
+    # stacked-scan leaf: (reps, d, H, dh) — rules count from the END
+    assert spec_for_param("wq", (12, 4096, 32, 128), MESH) \
+        == P(None, "data", "model", None)
+
+
+def test_mlp_and_moe_rules():
+    assert spec_for_param("w_in", (4096, 12288), MESH) == P("data", "model")
+    assert spec_for_param("w_out", (12288, 4096), MESH) == P("model", "data")
+    # MoE 128 experts: expert dim shards (expert parallelism)
+    assert spec_for_param("w_in", (128, 5120, 8192), MESH) \
+        == P("model", "data", None)
+    # grok 8 experts: replicated experts, d_ff shards (expert-tensor hybrid)
+    assert spec_for_param("w_in", (8, 6144, 32768), MESH) \
+        == P(None, "data", "model")
+
+
+def test_embedding_fallback():
+    # whisper vocab 51866 % 16 != 0 -> falls back to sharding d_model
+    assert spec_for_param("embedding", (51866, 1280), MESH) \
+        == P(None, "model")
+    # no FSDP on embeddings (data-sharded d materialises full logits,
+    # §Perf it. 4)
+    assert spec_for_param("embedding", (151936, 4096), MESH) \
+        == P("model", None)
+
+
+def test_vectors_replicated():
+    assert spec_for_param("scale", (4096,), MESH) == P(None)
+    assert spec_for_param("b_gates", (3072,), MESH) == P(None)
+
+
+def test_batch_axes():
+    assert batch_axes(MESH, 256) == ("data",)
+    assert batch_axes(MESH, 1) is None
+    assert batch_axes(POD, 256) == ("pod", "data")
+    assert batch_axes(POD, 2) == ("pod",)
+
+
+def test_cache_spec():
+    # (reps, B, S, kv, dh): batch over data, SEQUENCE over model
+    # (flash-decoding-style; dh-sharding all-gathers the cache every
+    # layer, §Perf it. 3)
+    s = cache_spec((36, 128, 32768, 8, 128), MESH, ("data",))
+    assert s == P(None, "data", "model", None, None)
+    # batch=1 -> replicated batch, seq still sharded
+    s = cache_spec((36, 1, 524288, 8, 128), MESH, None)
+    assert s == P(None, None, "model", None, None)
+    # recurrent state (reps, B, dr): channel shards
+    s = cache_spec((12, 32, 4096), MESH, ("data",))
+    assert s == P(None, "data", "model")
+
+
+def test_tree_specs_cover_every_leaf(key):
+    cfg = get_config("qwen3-8b").reduced()
+    model = build_model(cfg)
+    shapes = jax.eval_shape(model.init, key)
+    specs = tree_specs(shapes, MESH)
+    n_leaves = len(jax.tree.leaves(shapes))
+    n_specs = len(jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P)))
+    assert n_leaves == n_specs
+
+
+# -- roofline parser -----------------------------------------------------------
+
+HLO = """
+  %ag = f32[256,128]{1,0} all-gather(%p), channel_id=1, replica_groups={{0,1,2,3},{4,5,6,7}}, dimensions={0}
+  %ar = bf16[64,64]{1,0} all-reduce(%x), channel_id=2, replica_groups=[32,8]<=[256] use_global_device_ids=true
+  %rs = f32[32]{0} reduce-scatter(%y), channel_id=3, replica_groups={{0,1}}, dimensions={0}
+  %cp = f32[16,16]{1,0} collective-permute(%z), channel_id=4, source_target_pairs={{0,1}}
+  %dot = f32[8,8]{1,0} dot(%a, %b), lhs_contracting_dims={1}
+"""
+
+
+def test_collective_bytes_parser():
+    out = rl.collective_bytes(HLO)
+    assert out["all-gather"] == int(256 * 128 * 4 * 3 / 4)
+    assert out["all-reduce"] == int(2 * 64 * 64 * 2 * 7 / 8)
+    assert out["reduce-scatter"] == 32 * 4 * 1
+    assert out["collective-permute"] == 16 * 16 * 4
+    assert out["all-to-all"] == 0
+
+
+def test_model_flops_estimate():
+    cfg = get_config("qwen3-8b")
+    train = rl.model_flops_estimate(cfg, INPUT_SHAPES["train_4k"])
+    dec = rl.model_flops_estimate(cfg, INPUT_SHAPES["decode_32k"])
+    n = cfg.active_param_count()
+    assert train == pytest.approx(6.0 * n * 256 * 4096)
+    assert dec == pytest.approx(2.0 * n * 128)
+
+
+def test_moe_active_params_smaller():
+    cfg = get_config("llama4-maverick-400b-a17b")
+    assert cfg.active_param_count() < 0.25 * cfg.param_count()
+
+
+def test_format_table_runs():
+    r = rl.Roofline("a", "s", "m", 256, 1e12, 1e12, 1e9, {}, 0.0, 1e15,
+                    0.1, 0.2, 0.05)
+    assert r.dominant == "memory"
+    assert "memory" in rl.format_table([r])
+
+
+def test_input_specs_all_pairs_build():
+    """ShapeDtypeStruct specs build for every applicable (arch × shape)."""
+    from repro.configs import ASSIGNED
+    from repro.configs.base import shape_applicable
+    for arch in ASSIGNED:
+        cfg = get_config(arch)
+        for sname, shape in INPUT_SHAPES.items():
+            ok, _ = shape_applicable(cfg, shape)
+            if not ok:
+                continue
+            specs = input_specs(cfg, shape)
+            assert "tokens" in specs or "token" in specs
+            for leaf in jax.tree.leaves(specs):
+                assert isinstance(leaf, jax.ShapeDtypeStruct)
