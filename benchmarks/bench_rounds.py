@@ -1,0 +1,218 @@
+"""Rounds/sec for the HFL round drivers at (N, M) ∈ {(64, 4), (256, 8),
+(1024, 16)}:
+
+* ``eager``   — a faithful replica of the pre-engine ``run_round``: per-edge
+  fuzzy scoring through host numpy, numpy association, TWO ``round_cost``
+  evaluations, a per-iteration-dispatched python τ₂ loop and per-round host
+  syncs.  This is the baseline the round-engine refactor retired.
+* ``stepped`` — one jitted ``round_step`` dispatch per round (the wrapper's
+  ``run``): same math, one program, still a host sync per round.
+* ``scanned`` — ``engine.run_scanned``: the experiment as ONE ``lax.scan``.
+* ``fleet``   — ``engine.run_fleet``: vmap of the scanned program over seeds.
+
+The model/data are kept small so the numbers measure the ROUND pipeline,
+not the MLP.  Writes BENCH_rounds.json at the repo root so the perf
+trajectory is tracked across PRs.
+
+  PYTHONPATH=src python -m benchmarks.bench_rounds [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.hfl_mnist import CONFIG
+from repro.core import (aggregation, association, cost, engine, fuzzy, noma,
+                        pdd)
+from repro.core.hfl import HFLSimulation
+from repro.models.mlp import MLPClassifier
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_rounds.json")
+
+SIZES = ((64, 4), (256, 8), (1024, 16))
+# gcea + fastest is the fully host-callback-free acceptance path.
+SPEC = engine.EngineSpec(policy="gcea", scheduler="fastest")
+
+
+def _cfg(n: int, m: int):
+    return dataclasses.replace(CONFIG, n_clients=n, n_edges=m,
+                               clients_per_edge=4, min_samples=60,
+                               max_samples=120, hidden=16, input_dim=32,
+                               local_batch=16)
+
+
+class LegacyEagerSim:
+    """The seed implementation's ``run_round``, preserved for the baseline:
+    host numpy association + double cost eval + eager τ₂ python loop."""
+
+    def __init__(self, cfg, state: engine.RoundState,
+                 bundle: engine.RoundBundle, topo, rng):
+        self.cfg = cfg
+        self.bundle = bundle
+        self.topo = topo
+        self.rng = rng
+        self.key = state.key
+        self.gains = state.gains
+        self.staleness = state.staleness
+        self.global_params = state.global_params
+        self.client_params = state.client_params
+        self.model = MLPClassifier(cfg.input_dim, cfg.hidden, cfg.n_classes)
+        self._local_fit = jax.jit(engine._local_sgd(
+            self.model, cfg.lr, cfg.tau1, cfg.local_batch))
+
+    def _scores(self) -> np.ndarray:
+        """The seed's per-edge host loop (computed for EVERY policy)."""
+        gains = np.asarray(self.gains)
+        n, m = gains.shape
+        db = 10.0 * np.log10(np.maximum(gains, 1e-30))
+        lo, hi = db.min(), db.max()
+        cq = np.asarray(fuzzy.normalize(jnp.asarray(db - lo),
+                                        float(max(hi - lo, 1e-9))))
+        dq = np.asarray(fuzzy.normalize(
+            jnp.asarray(np.asarray(self.bundle.counts)),
+            float(self.cfg.max_samples)))
+        ms = np.asarray(fuzzy.normalize(
+            self.staleness.astype(jnp.float32),
+            float(max(int(jnp.max(self.staleness)), 1))))
+        scores = np.zeros((n, m), np.float32)
+        for j in range(m):
+            scores[:, j] = np.asarray(fuzzy.fuzzy_scores(
+                jnp.asarray(np.ascontiguousarray(cq[:, j])),
+                jnp.asarray(dq), jnp.asarray(ms)))
+        return scores
+
+    def run_round(self) -> float:
+        cfg, bundle = self.cfg, self.bundle
+        self.key, k = jax.random.split(self.key)
+        self.gains = noma.evolve_gains(
+            k, self.gains, bundle.dist,
+            path_loss_exponent=cfg.path_loss_exponent, rho=SPEC.fading_rho)
+        assoc_np = association.associate(
+            SPEC.policy, scores=self._scores(),
+            gains_to_edges=np.asarray(self.gains), dist=self.topo["dist"],
+            quota=cfg.clients_per_edge,
+            coverage_radius_m=engine.coverage_radius(cfg), rng=self.rng)
+        assoc = jnp.asarray(assoc_np, jnp.float32)
+        n = cfg.n_clients
+        p = jnp.full((n,), 0.5 * (cfg.p_min_w + cfg.p_max_w))
+        f = jnp.full((n,), 0.5 * (cfg.f_min_hz + cfg.f_max_hz))
+        quota = max(1, int(round(cfg.semi_sync_fraction * cfg.n_edges)))
+        rc_all = cost.round_cost(cfg, power_w=p, f_hz=f, gains=self.gains,
+                                 assoc=assoc, z=jnp.ones((cfg.n_edges,)),
+                                 n_samples=bundle.counts)
+        z = pdd.semi_sync_fastest(rc_all.per_edge_time_s, quota)
+        rc = cost.round_cost(cfg, power_w=p, f_hz=f, gains=self.gains,
+                             assoc=assoc, z=z, n_samples=bundle.counts)
+        selected = jnp.sum(assoc, axis=1) > 0
+        edge_params = aggregation.replicate(self.global_params, cfg.n_edges)
+        client_params = aggregation.broadcast_to_clients(
+            None, assoc, edge_params, self.client_params)
+        for _ in range(cfg.tau2):
+            self.key, k = jax.random.split(self.key)
+            ks = jax.random.split(k, n)
+            trained = self._local_fit(client_params, bundle.x, bundle.y,
+                                      bundle.counts, ks)
+            client_params = jax.tree.map(
+                lambda new, old: jnp.where(
+                    selected.reshape((-1,) + (1,) * (new.ndim - 1)),
+                    new, old), trained, client_params)
+            edge_params = aggregation.edge_aggregate(client_params, assoc,
+                                                     bundle.counts)
+            client_params = aggregation.broadcast_to_clients(
+                None, assoc, edge_params, client_params)
+        edge_data = jnp.sum(assoc * bundle.counts[:, None], axis=0)
+        z_eff = z * (edge_data > 0).astype(z.dtype)
+        if float(jnp.sum(z_eff * edge_data)) > 0:
+            self.global_params = aggregation.cloud_aggregate(
+                edge_params, z_eff, edge_data)
+        self.client_params = client_params
+        acc = float(self.model.accuracy(self.global_params, bundle.test_x,
+                                        bundle.test_y))
+        return acc
+
+
+def bench_size(n: int, m: int, *, eager_rounds: int, scan_rounds: int,
+               fleet_seeds: int) -> Dict[str, float]:
+    cfg = _cfg(n, m)
+    state, bundle, aux = engine.init_simulation(cfg, seed=0)
+
+    # -- legacy eager (the retired execution model) --------------------------
+    legacy = LegacyEagerSim(cfg, state, bundle, aux["topo"], aux["rng"])
+    legacy.run_round()                                # compile
+    t0 = time.perf_counter()
+    for _ in range(eager_rounds):
+        legacy.run_round()
+    eager_rps = eager_rounds / (time.perf_counter() - t0)
+
+    # -- stepped: one jitted round_step per round ----------------------------
+    sim = HFLSimulation(cfg, seed=0, policy=SPEC.policy,
+                        scheduler=SPEC.scheduler)
+    sim.run_round()                                   # compile
+    t0 = time.perf_counter()
+    sim.run(eager_rounds)
+    stepped_rps = eager_rounds / (time.perf_counter() - t0)
+
+    # -- scanned: the whole experiment is one XLA program --------------------
+    jax.block_until_ready(
+        engine.run_scanned(cfg, SPEC, state, bundle, scan_rounds))
+    t0 = time.perf_counter()
+    jax.block_until_ready(
+        engine.run_scanned(cfg, SPEC, state, bundle, scan_rounds))
+    scanned_rps = scan_rounds / (time.perf_counter() - t0)
+
+    # -- fleet: vmap the scanned program over independent seeds --------------
+    pairs = [engine.init_simulation(cfg, seed=s)[:2]
+             for s in range(fleet_seeds)]
+    states, bundles = engine.stack_fleet(pairs)
+    jax.block_until_ready(
+        engine.run_fleet(cfg, SPEC, states, bundles, scan_rounds))
+    t0 = time.perf_counter()
+    jax.block_until_ready(
+        engine.run_fleet(cfg, SPEC, states, bundles, scan_rounds))
+    fleet_rps = fleet_seeds * scan_rounds / (time.perf_counter() - t0)
+
+    return {"eager_rps": round(eager_rps, 3),
+            "stepped_rps": round(stepped_rps, 3),
+            "scanned_rps": round(scanned_rps, 3),
+            "fleet_rps": round(fleet_rps, 3),
+            "scan_speedup": round(scanned_rps / eager_rps, 2),
+            "fleet_speedup": round(fleet_rps / eager_rps, 2),
+            "eager_rounds": eager_rounds, "scan_rounds": scan_rounds,
+            "fleet_seeds": fleet_seeds}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer rounds/seeds (CI-speed)")
+    args = ap.parse_args(argv)
+
+    results: Dict[str, Dict[str, float]] = {}
+    for n, m in SIZES:
+        big = n >= 1024
+        r = bench_size(
+            n, m,
+            eager_rounds=3 if (args.quick or big) else 6,
+            scan_rounds=5 if (args.quick or big) else 15,
+            fleet_seeds=2 if (args.quick or big) else 4)
+        results[f"{n}x{m}"] = r
+        emit(f"rounds_n{n}_m{m}", 1e6 / r["scanned_rps"],
+             {k: v for k, v in r.items()})
+
+    with open(OUT, "w") as fh:
+        json.dump({"spec": dataclasses.asdict(SPEC), "results": results},
+                  fh, indent=2)
+    print(f"wrote {os.path.normpath(OUT)}")
+
+
+if __name__ == "__main__":
+    main()

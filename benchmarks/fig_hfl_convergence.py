@@ -1,5 +1,7 @@
 """Paper Figs. 8-11: HFL accuracy/loss vs global round, FCEA vs RCEA/GCEA/OMA,
-IID and non-IID."""
+IID and non-IID — driven by the pure round engine: each scheme's seed sweep
+is ONE ``engine.run_fleet`` call (vmap over seeds of the scanned round
+program) instead of seeds × rounds eager python steps."""
 from __future__ import annotations
 
 import time
@@ -8,8 +10,7 @@ from typing import Dict, List
 import numpy as np
 
 from benchmarks.common import SMALL, emit
-from repro.core.hfl import HFLSimulation
-
+from repro.core import engine
 
 SEEDS = (0, 1, 2)
 
@@ -22,15 +23,17 @@ def run(rounds: int = 10, iid: bool = True) -> Dict[str, Dict[str, float]]:
                ("oma", False)]
     for name, noma in schemes:
         policy = "fcea" if name == "oma" else name
+        spec = engine.EngineSpec(policy=policy, noma_enabled=noma)
         t0 = time.time()
-        rec = out.setdefault(name, {"auc": [], "final": [], "loss": []})
-        for seed in SEEDS:
-            sim = HFLSimulation(SMALL, seed=seed, iid=iid, policy=policy,
-                                noma_enabled=noma)
-            ms = sim.run(rounds)
-            rec["auc"].append(float(np.mean([m.accuracy for m in ms])))
-            rec["final"].append(ms[-1].accuracy)
-            rec["loss"].append(ms[-1].loss)
+        pairs = [engine.init_simulation(SMALL, seed=s, iid=iid)[:2]
+                 for s in SEEDS]
+        states, bundles = engine.stack_fleet(pairs)
+        _, ms = engine.run_fleet(SMALL, spec, states, bundles, rounds)
+        acc = np.asarray(ms.accuracy)                     # (seeds, rounds)
+        loss = np.asarray(ms.loss)
+        rec = out[name] = {"auc": acc.mean(axis=1).tolist(),
+                           "final": acc[:, -1].tolist(),
+                           "loss": loss[:, -1].tolist()}
         emit(f"hfl_{'iid' if iid else 'noniid'}_{name}",
              (time.time() - t0) / (rounds * len(SEEDS)) * 1e6,
              {"acc_auc": round(float(np.mean(rec["auc"])), 4),

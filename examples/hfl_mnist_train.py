@@ -4,9 +4,14 @@ Trains the global classifier for ``--rounds`` global rounds under the fuzzy
 client-edge association, PDD edge scheduling, and (optionally) a DDPG-trained
 resource allocator; prints the per-round metrics of Figs. 8-12.
 
+The whole experiment runs through the pure round engine: by default all
+rounds execute as ONE compiled ``lax.scan`` program (``run_scanned``);
+``--eager`` steps round by round instead (same trajectory, handy for
+debugging / incremental output).
+
   PYTHONPATH=src python examples/hfl_mnist_train.py --rounds 10 [--non-iid]
                                                     [--policy fcea|gcea|rcea]
-                                                    [--ddpg] [--full]
+                                                    [--ddpg] [--full] [--eager]
 """
 import argparse
 import dataclasses
@@ -25,6 +30,9 @@ def main() -> int:
     ap.add_argument("--ddpg", action="store_true")
     ap.add_argument("--full", action="store_true",
                     help="paper-faithful 64-client topology (slower)")
+    ap.add_argument("--eager", action="store_true",
+                    help="dispatch one jitted round at a time instead of "
+                         "one scanned program for all rounds")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -41,8 +49,10 @@ def main() -> int:
               [round(r, 2) for r in hist["episode_reward"]])
 
     print(f"policy={args.policy} noma={not args.oma} "
-          f"iid={not args.non_iid} clients={cfg.n_clients}")
-    for m in sim.run(args.rounds):
+          f"iid={not args.non_iid} clients={cfg.n_clients} "
+          f"driver={'eager' if args.eager else 'scanned'}")
+    ms = sim.run(args.rounds) if args.eager else sim.run_scanned(args.rounds)
+    for m in ms:
         print(f"round {m.round:3d}  acc={m.accuracy:.4f}  loss={m.loss:.4f}  "
               f"avgMS={m.avg_staleness:.2f}  T={m.total_time_s:.2f}s  "
               f"E={m.total_energy_j:.1f}J  cost={m.cost:.2f}  "

@@ -7,14 +7,22 @@
 * GCEA — greedy single-criterion benchmark: strongest channel gain.
 * RCEA — random association benchmark.
 
-Association is control-plane work on small (N, M) arrays once per round —
-implemented with numpy on host for clarity; the resulting one-hot matrix
-feeds the jitted cost/aggregation paths.
+Two implementations live side by side (DESIGN.md §2.3):
+
+* the original numpy ``_resolve`` — kept as the *parity oracle*: small,
+  obviously-correct host code that the property tests check the JAX path
+  against;
+* ``resolve_jax`` — the same greedy round-robin admission re-expressed as a
+  bounded ``lax.while_loop`` so that association can live *inside* the
+  jitted ``round_step`` with no host callback.  ``POLICIES`` is the
+  registry mapping policy names to JAX preference-matrix builders.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Callable, Dict, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import fuzzy
@@ -99,6 +107,87 @@ def rcea(rng: np.random.Generator, dist: np.ndarray, quota: int,
     pref = np.where(coverage, rng.random((n, m)), -np.inf)
     order = np.argsort(-pref, axis=0).T
     return _resolve(order, dist, quota, coverage)
+
+
+# ---------------------------------------------------------------------------
+# JAX-native path (used inside the jitted round engine)
+# ---------------------------------------------------------------------------
+
+def resolve_jax(order: jnp.ndarray, dist: jnp.ndarray, quota: int,
+                coverage: jnp.ndarray) -> jnp.ndarray:
+    """``_resolve`` as a bounded ``lax.while_loop`` (one pop attempt per
+    iteration), bit-compatible with the numpy oracle given the same
+    ``order``.
+
+    order: (M, N) int — per-edge client indices by descending preference.
+    Returns assoc (N, M) one-hot int32.
+    """
+    m_edges, n_clients = order.shape
+    # Each iteration either advances an edge's queue pointer (≤ N·M pops
+    # total) or advances to the next edge (≤ M per pass; ≤ N·M + 1 passes,
+    # since every non-final pass changes `taken` at least once and each
+    # client's assigned-edge distance strictly shrinks per steal).
+    max_iter = n_clients * m_edges + m_edges * (n_clients * m_edges + 2) + 2
+
+    def cond(s):
+        return (~s[5]) & (s[6] < max_iter)
+
+    def body(s):
+        taken, ptr, filled, m, progress, done, it = s
+        can_pop = (filled[m] < quota) & (ptr[m] < n_clients)
+        c = order[m, jnp.minimum(ptr[m], n_clients - 1)]
+        t = taken[c]
+        vacant = t < 0
+        safe_t = jnp.maximum(t, 0)
+        steal = (~vacant) & (t != m) & (dist[c, m] < dist[c, safe_t])
+        admit = can_pop & coverage[c, m] & (vacant | steal)
+        ptr = ptr.at[m].add(can_pop.astype(ptr.dtype))
+        taken = jnp.where(admit, taken.at[c].set(m), taken)
+        filled = filled.at[m].add(admit.astype(filled.dtype))
+        filled = filled.at[safe_t].add(
+            -(admit & ~vacant).astype(filled.dtype))
+        progress = progress | admit
+        advance = (~can_pop) | admit      # inner loop ends: next edge
+        m_next = jnp.where(advance, m + 1, m)
+        wrap = m_next >= m_edges
+        done = done | (wrap & ~progress)
+        m_next = jnp.where(wrap, 0, m_next)
+        progress = progress & ~wrap       # fresh pass
+        return taken, ptr, filled, m_next, progress, done, it + 1
+
+    taken0 = jnp.full((n_clients,), -1, jnp.int32)
+    zeros_m = jnp.zeros((m_edges,), jnp.int32)
+    state = (taken0, zeros_m, zeros_m, jnp.asarray(0, jnp.int32),
+             jnp.asarray(False), jnp.asarray(False), jnp.asarray(0, jnp.int32))
+    taken = jax.lax.while_loop(cond, body, state)[0]
+    return ((taken[:, None] == jnp.arange(m_edges)[None, :]) &
+            (taken[:, None] >= 0)).astype(jnp.int32)
+
+
+# Registry: policy name -> preference-matrix builder (N, M).  ``scores`` may
+# be None for policies that don't use the fuzzy competency.
+PrefBuilder = Callable[..., jnp.ndarray]
+
+POLICIES: Dict[str, PrefBuilder] = {
+    "fcea": lambda scores, gains, key: scores,
+    "gcea": lambda scores, gains, key: gains,
+    "rcea": lambda scores, gains, key: jax.random.uniform(key, gains.shape),
+}
+
+
+def associate_jax(policy: str, *, scores: jnp.ndarray | None,
+                  gains: jnp.ndarray, dist: jnp.ndarray, quota: int,
+                  coverage_radius_m: float, key) -> jnp.ndarray:
+    """JAX-native association (N, M) one-hot; pure, jit/vmap-safe."""
+    if policy not in POLICIES:
+        raise ValueError(f"unknown association policy {policy!r}")
+    pref = POLICIES[policy](scores, gains, key)
+    if pref.ndim == 1:
+        pref = jnp.broadcast_to(pref[:, None], dist.shape)
+    coverage = dist <= coverage_radius_m
+    pref = jnp.where(coverage, pref, -jnp.inf)
+    order = jnp.argsort(-pref, axis=0).T                       # (M, N)
+    return resolve_jax(order, dist, quota, coverage)
 
 
 def associate(policy: str, *, scores: np.ndarray, gains_to_edges: np.ndarray,

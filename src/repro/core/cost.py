@@ -68,6 +68,19 @@ def uplink(cfg, power_w: jnp.ndarray, gains: jnp.ndarray,
     return t_com, e_com, rates
 
 
+def apply_schedule(cfg, rc: RoundCost, z: jnp.ndarray) -> RoundCost:
+    """Re-mask a ``round_cost`` evaluated at z = 1 with the actual edge
+    selection.  The per-client and per-edge terms don't depend on z, so the
+    scheduler needs only ONE cost evaluation: Eqs. 18-19 + 23a are a cheap
+    masked reduction over the cached per-edge totals.
+    """
+    total_time = jnp.max(z * rc.per_edge_time_s)
+    total_energy = jnp.sum(z * rc.per_edge_energy_j)
+    c = cfg.lambda_t * total_time + cfg.lambda_e * total_energy
+    return RoundCost(total_time, total_energy, c, rc.per_edge_time_s,
+                     rc.per_edge_energy_j, rc.client_time_s, rc.rates_bps)
+
+
 def round_cost(cfg, *, power_w: jnp.ndarray, f_hz: jnp.ndarray,
                gains: jnp.ndarray, assoc: jnp.ndarray, z: jnp.ndarray,
                n_samples: jnp.ndarray, noma_enabled: bool = True) -> RoundCost:

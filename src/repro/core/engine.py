@@ -1,0 +1,396 @@
+"""Pure-functional HFL round engine (DESIGN.md §2).
+
+The paper's global round (fade → fuzzy-score → associate → allocate →
+τ₂·τ₁ training → schedule → cloud aggregate, §II-§IV) as ONE pure function:
+
+    round_step(cfg, spec, state, bundle) -> (state', RoundMetrics)
+
+* ``RoundState``  — everything that evolves across rounds, as a pytree:
+  stacked global/client params, channel gains, staleness, the PRNG key and
+  the round index.
+* ``RoundBundle`` — everything that is fixed for one scenario but differs
+  between scenarios (topology distances, the federated dataset): traced
+  arrays, so a *batch* of scenarios is just a stacked bundle.
+* ``cfg``/``spec`` — hashable static configuration; they select code paths
+  at trace time (association policy, allocator, scheduler, NOMA vs OMA).
+
+Because ``round_step`` is end-to-end jittable (association included — see
+``association.resolve_jax``), two compiled drivers come for free:
+
+* ``run_scanned``  — ``lax.scan`` over rounds: an entire experiment is one
+  XLA program (no per-round dispatch, no host sync);
+* ``run_fleet``    — ``vmap`` over a batch of independent simulations for
+  multi-seed / multi-scenario sweeps, on top of the scanned driver.
+
+The legacy ``HFLSimulation`` class survives as a thin stateful wrapper in
+``repro.core.hfl``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (aggregation, association, cost, env, fuzzy, noma,
+                        pdd, staleness)
+from repro.data import federated
+from repro.models.mlp import MLPClassifier
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# Static spec + pytrees
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EngineSpec:
+    """Static (hashable) per-simulation switches; a jit static argument."""
+    policy: str = "fcea"            # fcea | gcea | rcea
+    allocator: str = "mid"          # mid | rra | fpa | fca | ddpg
+    scheduler: str = "pdd"          # pdd | fastest
+    noma_enabled: bool = True
+    fading_rho: float = 0.9
+    oma_quota_factor: float = 0.5
+
+
+class RoundBundle(NamedTuple):
+    """Per-scenario constants (traced; leading batch axis under vmap)."""
+    dist: jnp.ndarray        # (N, M) client-edge distances
+    x: jnp.ndarray           # (N, cap, dim) padded client data
+    y: jnp.ndarray           # (N, cap) labels
+    counts: jnp.ndarray      # (N,) float32 — D_n
+    test_x: jnp.ndarray      # (T, dim)
+    test_y: jnp.ndarray      # (T,)
+
+
+class RoundState(NamedTuple):
+    """Everything that evolves across global rounds."""
+    global_params: Params    # cloud model
+    client_params: Params    # stacked (N, ...) client models
+    gains: jnp.ndarray       # (N, M) current |h|²
+    staleness: jnp.ndarray   # (N,) int32 — A_n
+    key: jnp.ndarray         # PRNG key
+    round_idx: jnp.ndarray   # () int32
+
+
+class RoundMetrics(NamedTuple):
+    """Per-round observables (jnp leaves; stacked along rounds by scan)."""
+    round: jnp.ndarray
+    accuracy: jnp.ndarray
+    loss: jnp.ndarray
+    avg_staleness: jnp.ndarray
+    total_time_s: jnp.ndarray
+    total_energy_j: jnp.ndarray
+    cost: jnp.ndarray
+    n_associated: jnp.ndarray
+    z: jnp.ndarray           # (M,)
+
+
+# ---------------------------------------------------------------------------
+# Topology (paper §V: 500 m square, cloud at centre, 4 edges at midpoints
+# of the corner-to-centre lines, clients uniform)
+# ---------------------------------------------------------------------------
+
+def make_topology(rng: np.random.Generator, *, n_clients: int, n_edges: int,
+                  area_side_m: float) -> Dict[str, np.ndarray]:
+    half = area_side_m / 2.0
+    cloud = np.array([half, half])
+    corners = np.array([[0.0, 0.0], [0.0, area_side_m],
+                        [area_side_m, 0.0], [area_side_m, area_side_m]])
+    mids = (corners + cloud) / 2.0
+    if n_edges <= 4:
+        edges = mids[:n_edges]
+    else:  # extra edges uniformly placed
+        extra = rng.uniform(0.0, area_side_m, (n_edges - 4, 2))
+        edges = np.concatenate([mids, extra], axis=0)
+    clients = rng.uniform(0.0, area_side_m, (n_clients, 2))
+    dist = np.linalg.norm(clients[:, None, :] - edges[None, :, :], axis=-1)
+    return {"cloud": cloud, "edges": edges, "clients": clients, "dist": dist}
+
+
+def coverage_radius(cfg) -> float:
+    """Generous enough that every client can reach ≥ 1 edge."""
+    return cfg.area_side_m * 0.75
+
+
+def quota_for(cfg, spec: EngineSpec) -> int:
+    """OMA admits fewer clients per edge: each needs an orthogonal channel
+    slice (paper §V-B — 'insufficient orchestrated clients')."""
+    if spec.noma_enabled:
+        return cfg.clients_per_edge
+    return max(1, int(cfg.clients_per_edge * spec.oma_quota_factor))
+
+
+# ---------------------------------------------------------------------------
+# Initialisation (host side: numpy RNG builds the scenario once)
+# ---------------------------------------------------------------------------
+
+def init_simulation(cfg, *, seed: int = 0, iid: bool = True
+                    ) -> Tuple[RoundState, RoundBundle, Dict[str, Any]]:
+    """Build one scenario: returns (state, bundle, aux) where aux carries
+    the host-side objects (topo dict, FederatedData, model, numpy rng)."""
+    rng = np.random.default_rng(seed)
+    key = jax.random.key(seed)
+    topo = make_topology(rng, n_clients=cfg.n_clients, n_edges=cfg.n_edges,
+                         area_side_m=cfg.area_side_m)
+    data = federated.make_federated(
+        rng, n_clients=cfg.n_clients, dim=cfg.input_dim,
+        n_classes=cfg.n_classes, iid=iid,
+        min_samples=cfg.min_samples, max_samples=cfg.max_samples,
+        dirichlet_alpha=cfg.dirichlet_alpha,
+        noise=getattr(cfg, "data_noise", 1.2))
+    model = MLPClassifier(cfg.input_dim, cfg.hidden, cfg.n_classes)
+    key, k_init = jax.random.split(key)
+    global_params = model.init(k_init)
+    dist = jnp.asarray(topo["dist"])
+    key, k_gain = jax.random.split(key)
+    gains = noma.rayleigh_gains(k_gain, dist,
+                                path_loss_exponent=cfg.path_loss_exponent)
+    state = RoundState(
+        global_params=global_params,
+        client_params=aggregation.replicate(global_params, cfg.n_clients),
+        gains=gains,
+        staleness=staleness.init_staleness(cfg.n_clients),
+        key=key,
+        round_idx=jnp.asarray(0, jnp.int32))
+    bundle = RoundBundle(
+        dist=dist,
+        x=jnp.asarray(data.x),
+        y=jnp.asarray(data.y),
+        counts=jnp.asarray(data.counts, jnp.float32),
+        test_x=jnp.asarray(data.test_x),
+        test_y=jnp.asarray(data.test_y))
+    aux = {"topo": topo, "data": data, "model": model, "rng": rng}
+    return state, bundle, aux
+
+
+def stack_fleet(states_and_bundles) -> Tuple[RoundState, RoundBundle]:
+    """Stack per-seed (state, bundle) pairs along a new leading fleet axis
+    so ``run_fleet`` can vmap over them."""
+    states = [s for s, _ in states_and_bundles]
+    bundles = [b for _, b in states_and_bundles]
+    stack = lambda *ls: jnp.stack(ls)
+    return (jax.tree.map(stack, *states), jax.tree.map(stack, *bundles))
+
+
+# ---------------------------------------------------------------------------
+# Round pieces (pure)
+# ---------------------------------------------------------------------------
+
+def _local_sgd(model: MLPClassifier, lr: float, tau1: int, batch_size: int):
+    """(params_N, x_N, y_N, count_N, key_N) -> params_N, vmapped over N."""
+
+    def one_client(params, x, y, count, key):
+        def step(carry, k):
+            p = carry
+            idx = jax.random.randint(k, (batch_size,), 0,
+                                     jnp.maximum(count, 1))
+            bx, by = x[idx], y[idx]
+            g = jax.grad(model.loss)(p, (bx, by))
+            p = jax.tree.map(lambda w, gw: w - lr * gw, p, g)
+            return p, None
+
+        ks = jax.random.split(key, tau1)
+        params, _ = jax.lax.scan(step, params, ks)
+        return params
+
+    return jax.vmap(one_client)
+
+
+def _associate(cfg, spec: EngineSpec, key, gains, dist, counts, stale
+               ) -> jnp.ndarray:
+    """(N, M) one-hot association, fully in JAX."""
+    scores = None
+    if spec.policy == "fcea":
+        scores = fuzzy.score_matrix(gains, counts, stale,
+                                    data_max=float(cfg.max_samples))
+    return association.associate_jax(
+        spec.policy, scores=scores, gains=gains, dist=dist,
+        quota=quota_for(cfg, spec),
+        coverage_radius_m=coverage_radius(cfg), key=key)
+
+
+def _allocate(cfg, spec: EngineSpec, key, assoc, gains, counts,
+              actor_params) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(p_w (N,), f_hz (N,)) per the configured allocator (§IV-C)."""
+    n = cfg.n_clients
+    mid_p = jnp.full((n,), 0.5 * (cfg.p_min_w + cfg.p_max_w))
+    mid_f = jnp.full((n,), 0.5 * (cfg.f_min_hz + cfg.f_max_hz))
+    if spec.allocator == "ddpg" and actor_params is not None:
+        from repro.core import ddpg                 # cycle-free lazy import
+        obs = env.observe(assoc, gains, counts)
+        act = ddpg.actor_apply(actor_params, obs)
+        return env.decode_action(cfg, act, n)
+    if spec.allocator == "rra":
+        a = jax.random.uniform(key, (2, n))
+        p = cfg.p_min_w + a[0] * (cfg.p_max_w - cfg.p_min_w)
+        f = cfg.f_min_hz + a[1] * (cfg.f_max_hz - cfg.f_min_hz)
+        return p, f
+    if spec.allocator == "fpa":     # fixed power, max freq
+        return mid_p, jnp.full((n,), cfg.f_max_hz)
+    # "fca" and "mid" (and ddpg before an agent exists): midpoint defaults
+    return mid_p, mid_f
+
+
+def _schedule(cfg, spec: EngineSpec, rc_all: cost.RoundCost
+              ) -> jnp.ndarray:
+    """Semi-synchronous edge-selection mask z (M,) from ONE cost eval."""
+    quota = max(1, int(round(cfg.semi_sync_fraction * cfg.n_edges)))
+    if spec.scheduler == "pdd":
+        t_cloud = jnp.full((cfg.n_edges,),
+                           cfg.edge_model_size_bits / cfg.edge_rate_bps)
+        U = jnp.max(rc_all.client_time_s)
+        res = pdd.pdd_schedule(rc_all.per_edge_energy_j, t_cloud, U,
+                               lam_t=cfg.lambda_t, lam_e=cfg.lambda_e,
+                               quota=quota)
+        return res.z_binary
+    return pdd.semi_sync_fastest(rc_all.per_edge_time_s, quota)
+
+
+def _train(cfg, model: MLPClassifier, key, state: RoundState,
+           bundle: RoundBundle, assoc, z) -> Tuple[Params, Params]:
+    """τ₂ × (τ₁ local SGD + edge aggregation) as a lax.scan, then the
+    semi-synchronous cloud aggregation (Eqs. 11, 17)."""
+    counts = bundle.counts
+    selected = jnp.sum(assoc, axis=1) > 0
+    local_fit = _local_sgd(model, cfg.lr, cfg.tau1, cfg.local_batch)
+
+    # associated clients start from the global model
+    edge_params = aggregation.replicate(state.global_params, cfg.n_edges)
+    client_params = aggregation.broadcast_to_clients(
+        None, assoc, edge_params, state.client_params)
+
+    def edge_iter(carry, k):
+        client_p, _ = carry
+        ks = jax.random.split(k, cfg.n_clients)
+        trained = local_fit(client_p, bundle.x, bundle.y, counts, ks)
+        # only associated clients actually train (others keep params)
+        client_p = jax.tree.map(
+            lambda new, old: jnp.where(
+                selected.reshape((-1,) + (1,) * (new.ndim - 1)), new, old),
+            trained, client_p)
+        edge_p = aggregation.edge_aggregate(client_p, assoc, counts)
+        client_p = aggregation.broadcast_to_clients(None, assoc, edge_p,
+                                                    client_p)
+        return (client_p, edge_p), None
+
+    ks = jax.random.split(key, cfg.tau2)
+    (client_params, edge_params), _ = jax.lax.scan(
+        edge_iter, (client_params, edge_params), ks)
+
+    edge_data = jnp.sum(assoc * counts[:, None], axis=0)      # (M,)
+    z_eff = z * (edge_data > 0).astype(z.dtype)
+    agg = aggregation.cloud_aggregate(edge_params, z_eff, edge_data)
+    # keep the old global model when no selected edge has data (branchless
+    # version of the eager `if` — Eq. 17 degenerate case)
+    has_data = jnp.sum(z_eff * edge_data) > 0
+    global_params = jax.tree.map(
+        lambda a, g: jnp.where(has_data, a, g), agg, state.global_params)
+    return global_params, client_params
+
+
+# ---------------------------------------------------------------------------
+# The round step + compiled drivers
+# ---------------------------------------------------------------------------
+
+def round_step(cfg, spec: EngineSpec, state: RoundState,
+               bundle: RoundBundle, actor_params: Optional[Params] = None
+               ) -> Tuple[RoundState, RoundMetrics]:
+    """One pure global round; jit/scan/vmap to taste."""
+    model = MLPClassifier(cfg.input_dim, cfg.hidden, cfg.n_classes)
+    key, k_fade, k_assoc, k_alloc, k_train = jax.random.split(state.key, 5)
+
+    # 1. channel fading
+    gains = noma.evolve_gains(k_fade, state.gains, bundle.dist,
+                              path_loss_exponent=cfg.path_loss_exponent,
+                              rho=spec.fading_rho)
+    # 2. fuzzy scoring + association (pure JAX — no host loop)
+    assoc = _associate(cfg, spec, k_assoc, gains, bundle.dist,
+                       bundle.counts, state.staleness).astype(jnp.float32)
+    # 3. resource allocation
+    p, f = _allocate(cfg, spec, k_alloc, assoc, gains, bundle.counts,
+                     actor_params)
+    # 4. ONE cost evaluation at z=1, reused by the scheduler and the final
+    #    masked round cost (Eqs. 18-19 depend on z only through a mask)
+    rc_all = cost.round_cost(cfg, power_w=p, f_hz=f, gains=gains,
+                             assoc=assoc, z=jnp.ones((cfg.n_edges,)),
+                             n_samples=bundle.counts,
+                             noma_enabled=spec.noma_enabled)
+    z = _schedule(cfg, spec, rc_all)
+    rc = cost.apply_schedule(cfg, rc_all, z)
+    # 5. τ₂·τ₁ training + hierarchical aggregation
+    global_params, client_params = _train(cfg, model, k_train, state,
+                                          bundle, assoc, z)
+    # 6. staleness (Eq. 20): reset only for clients whose edge was selected
+    selected = jnp.sum(assoc, axis=1) > 0
+    effective = selected & (z > 0)[jnp.argmax(assoc, axis=1)]
+    new_stale = staleness.update_staleness(state.staleness, effective)
+
+    round_idx = state.round_idx + 1
+    metrics = RoundMetrics(
+        round=round_idx,
+        accuracy=model.accuracy(global_params, bundle.test_x, bundle.test_y),
+        loss=model.loss(global_params, (bundle.test_x, bundle.test_y)),
+        avg_staleness=jnp.mean(new_stale.astype(jnp.float32)),
+        total_time_s=rc.total_time_s,
+        total_energy_j=rc.total_energy_j,
+        cost=rc.cost,
+        n_associated=jnp.sum(selected.astype(jnp.int32)),
+        z=z)
+    new_state = RoundState(global_params, client_params, gains, new_stale,
+                           key, round_idx)
+    return new_state, metrics
+
+
+round_step_jit = jax.jit(round_step, static_argnums=(0, 1))
+
+
+def _scan_rounds(cfg, spec, state, bundle, n_rounds, actor_params):
+    def step(s, _):
+        return round_step(cfg, spec, s, bundle, actor_params)
+
+    return jax.lax.scan(step, state, None, length=n_rounds)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 4))
+def run_scanned(cfg, spec: EngineSpec, state: RoundState,
+                bundle: RoundBundle, n_rounds: int,
+                actor_params: Optional[Params] = None
+                ) -> Tuple[RoundState, RoundMetrics]:
+    """A whole experiment as ONE XLA program: ``lax.scan`` over rounds.
+    Returned metrics leaves have a leading (n_rounds,) axis."""
+    return _scan_rounds(cfg, spec, state, bundle, n_rounds, actor_params)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 4))
+def run_fleet(cfg, spec: EngineSpec, states: RoundState,
+              bundles: RoundBundle, n_rounds: int,
+              actor_params: Optional[Params] = None
+              ) -> Tuple[RoundState, RoundMetrics]:
+    """``vmap`` of the scanned driver over a fleet of independent
+    simulations (stacked states/bundles from ``stack_fleet``).  Metrics
+    leaves gain a leading (n_seeds, n_rounds, ...) shape."""
+    return jax.vmap(
+        lambda s, b: _scan_rounds(cfg, spec, s, b, n_rounds, actor_params)
+    )(states, bundles)
+
+
+def metrics_row(metrics: RoundMetrics, i: Optional[int] = None):
+    """Host-side view: pull round ``i`` (or a scalar metrics) to floats."""
+    pick = (lambda l: l[i]) if i is not None else (lambda l: l)
+    return {
+        "round": int(pick(metrics.round)),
+        "accuracy": float(pick(metrics.accuracy)),
+        "loss": float(pick(metrics.loss)),
+        "avg_staleness": float(pick(metrics.avg_staleness)),
+        "total_time_s": float(pick(metrics.total_time_s)),
+        "total_energy_j": float(pick(metrics.total_energy_j)),
+        "cost": float(pick(metrics.cost)),
+        "n_associated": int(pick(metrics.n_associated)),
+        "z": np.asarray(pick(metrics.z)),
+    }

@@ -23,6 +23,34 @@ class EnvState(NamedTuple):
     key: jnp.ndarray
 
 
+# ---------------------------------------------------------------------------
+# Pure building blocks — shared by the env below AND the round engine
+# (DESIGN.md §2.2), so DDPG training and the simulation observe the world
+# through the SAME function instead of the engine reaching into env
+# internals.
+# ---------------------------------------------------------------------------
+
+def observe(assoc: jnp.ndarray, gains: jnp.ndarray,
+            n_samples: jnp.ndarray) -> jnp.ndarray:
+    """State S_j: per-client (log-gain to own edge, data share), masked to
+    the associated clients and flattened to (2N,)."""
+    associated = jnp.sum(assoc, axis=1) > 0
+    own_gain = jnp.sum(gains * assoc, axis=1)                   # (N,)
+    g = jnp.log10(jnp.maximum(own_gain, 1e-20)) / 10.0 + 1.0
+    d = n_samples / jnp.maximum(jnp.max(n_samples), 1.0)
+    return jnp.concatenate([jnp.where(associated, g, 0.0),
+                            jnp.where(associated, d, 0.0)])
+
+
+def decode_action(cfg, action: jnp.ndarray, n_clients: int
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """[0,1]^{2N} -> (p (N,) W, f (N,) Hz) within paper Table II bounds."""
+    a = action.reshape(2, n_clients)
+    p = cfg.p_min_w + a[0] * (cfg.p_max_w - cfg.p_min_w)
+    f = cfg.f_min_hz + a[1] * (cfg.f_max_hz - cfg.f_min_hz)
+    return p, f
+
+
 class NomaHflEnv:
     """Environment over a FIXED association (one scheduling epoch)."""
 
@@ -44,20 +72,11 @@ class NomaHflEnv:
     # -- helpers ---------------------------------------------------------------
 
     def _observe(self, gains: jnp.ndarray) -> jnp.ndarray:
-        own_gain = jnp.sum(gains * self.assoc, axis=1)          # (N,)
-        g = jnp.log10(jnp.maximum(own_gain, 1e-20)) / 10.0 + 1.0
-        d = self.n_samples / jnp.maximum(jnp.max(self.n_samples), 1.0)
-        return jnp.concatenate([jnp.where(self.associated, g, 0.0),
-                                jnp.where(self.associated, d, 0.0)])
+        return observe(self.assoc, gains, self.n_samples)
 
     def decode_action(self, action: jnp.ndarray
                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        """[0,1]^{2N} -> (p (N,) W, f (N,) Hz) within paper Table II bounds."""
-        cfg = self.cfg
-        a = action.reshape(2, self.n_clients)
-        p = cfg.p_min_w + a[0] * (cfg.p_max_w - cfg.p_min_w)
-        f = cfg.f_min_hz + a[1] * (cfg.f_max_hz - cfg.f_min_hz)
-        return p, f
+        return decode_action(self.cfg, action, self.n_clients)
 
     # -- gym-like API ------------------------------------------------------------
 

@@ -110,6 +110,27 @@ def fuzzy_score(cq: jnp.ndarray, dq: jnp.ndarray, ms: jnp.ndarray
 fuzzy_scores = jax.jit(jax.vmap(fuzzy_score))
 
 
+def score_matrix(gains: jnp.ndarray, counts: jnp.ndarray,
+                 staleness: jnp.ndarray, *, data_max: float) -> jnp.ndarray:
+    """(N, M) competency matrix, fully inside JAX (no host round-trips).
+
+    CQ is the per-edge channel quality normalised in dB (Eq. 21 on
+    log-gain): raw |h|² spans four decades of path loss, so a linear V/MV
+    map collapses all but the nearest clients to 0 — the dB scale is what
+    'channel quality' means in practice.  DQ and MS are shared across
+    edges.  This is the jittable replacement for the per-edge host loop
+    the eager simulation used to run (DESIGN.md §2).
+    """
+    db = 10.0 * jnp.log10(jnp.maximum(gains, 1e-30))
+    lo, hi = jnp.min(db), jnp.max(db)
+    cq = normalize(db - lo, jnp.maximum(hi - lo, 1e-9))          # (N, M)
+    dq = normalize(counts.astype(jnp.float32), data_max)          # (N,)
+    ms = normalize(staleness.astype(jnp.float32),
+                   jnp.maximum(jnp.max(staleness), 1).astype(jnp.float32))
+    per_edge = jax.vmap(fuzzy_scores, in_axes=(1, None, None), out_axes=1)
+    return per_edge(cq, dq, ms)
+
+
 def score_clients(channel_gain: jnp.ndarray, data_quantity: jnp.ndarray,
                   staleness: jnp.ndarray, *, gain_max: float | jnp.ndarray,
                   data_max: float | jnp.ndarray,

@@ -1,93 +1,38 @@
-"""End-to-end HFL engine (the paper's full system, §II–§IV).
+"""Stateful compatibility wrapper around the pure round engine.
 
-One ``HFLSimulation`` instance owns the wireless topology, the federated
-dataset, the stacked client models and the staleness state, and advances one
-*global round* per :meth:`run_round`:
+The actual per-round physics/learning pipeline lives in
+``repro.core.engine`` as the pure ``round_step`` (DESIGN.md §2); this module
+keeps the familiar ``HFLSimulation`` object API on top of it:
 
-  1. fade the channels; fuzzy-score every (client, edge) pair (§III),
-  2. associate clients (FCEA / GCEA / RCEA),
-  3. allocate (p, f) — DDPG policy or RRA/FPA/FCA baselines (§IV-C),
-  4. τ₂ edge iterations, each = τ₁ local SGD steps on every associated
-     client (vmapped: all clients train as ONE batched XLA program) +
-     edge aggregation (Eq. 11),
-  5. PDD (or fastest-M_c) semi-synchronous edge selection (§IV-B),
-  6. cloud aggregation (Eq. 17), staleness update (Eq. 20), cost (Eq. 23a).
+* ``run_round()``     — one jitted ``round_step`` call (eager driver),
+* ``run(n)``          — n eager rounds,
+* ``run_scanned(n)``  — the whole experiment as one compiled ``lax.scan``,
+* ``train_ddpg(...)`` — paper Algorithm 2 driver for the DDPG allocator.
 
-The TPU-native mapping (DESIGN.md §3): the client axis is a vmap axis that
-the mesh ``data`` dimension can shard, so edge aggregation is an in-group
-reduce and cloud aggregation a masked cross-group reduce.
+Both drivers advance the SAME ``RoundState`` pytree through the SAME pure
+function, so eager and scanned runs are bit-for-bit interchangeable (the
+parity tests in tests/test_round_engine.py assert it).  For multi-seed
+sweeps use ``engine.run_fleet`` directly.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (aggregation, association, cost, ddpg, env, fuzzy,
-                        noma, pdd, staleness)
-from repro.data import federated
-from repro.models.mlp import MLPClassifier
+from repro.core import association, ddpg, engine, env, fuzzy
+from repro.core.engine import (EngineSpec, RoundBundle, RoundState,
+                               make_topology)
 
-Params = Any
+__all__ = ["HFLSimulation", "RoundMetrics", "make_topology"]
 
-
-# ---------------------------------------------------------------------------
-# Topology (paper §V: 500 m square, cloud at centre, 4 edges at midpoints
-# of the corner-to-centre lines, clients uniform)
-# ---------------------------------------------------------------------------
-
-def make_topology(rng: np.random.Generator, *, n_clients: int, n_edges: int,
-                  area_side_m: float) -> Dict[str, np.ndarray]:
-    half = area_side_m / 2.0
-    cloud = np.array([half, half])
-    corners = np.array([[0.0, 0.0], [0.0, area_side_m],
-                        [area_side_m, 0.0], [area_side_m, area_side_m]])
-    mids = (corners + cloud) / 2.0
-    if n_edges <= 4:
-        edges = mids[:n_edges]
-    else:  # extra edges uniformly placed
-        extra = rng.uniform(0.0, area_side_m, (n_edges - 4, 2))
-        edges = np.concatenate([mids, extra], axis=0)
-    clients = rng.uniform(0.0, area_side_m, (n_clients, 2))
-    dist = np.linalg.norm(clients[:, None, :] - edges[None, :, :], axis=-1)
-    return {"cloud": cloud, "edges": edges, "clients": clients, "dist": dist}
-
-
-# ---------------------------------------------------------------------------
-# Local training (vmapped over the client axis)
-# ---------------------------------------------------------------------------
-
-def _local_sgd(model: MLPClassifier, lr: float, tau1: int, batch_size: int):
-    """Returns a jitted fn: (params_N, x_N, y_N, count_N, key_N) -> params_N."""
-
-    def one_client(params, x, y, count, key):
-        cap = x.shape[0]
-
-        def step(carry, k):
-            p = carry
-            idx = jax.random.randint(k, (batch_size,), 0, jnp.maximum(count, 1))
-            bx, by = x[idx], y[idx]
-            g = jax.grad(model.loss)(p, (bx, by))
-            p = jax.tree.map(lambda w, gw: w - lr * gw, p, g)
-            return p, None
-
-        ks = jax.random.split(key, tau1)
-        params, _ = jax.lax.scan(step, params, ks)
-        return params
-
-    return jax.jit(jax.vmap(one_client))
-
-
-# ---------------------------------------------------------------------------
-# Simulation
-# ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
 class RoundMetrics:
+    """Host-side (float/ndarray) view of one round — the legacy record."""
     round: int
     accuracy: float
     loss: float
@@ -98,227 +43,113 @@ class RoundMetrics:
     n_associated: int
     z: np.ndarray
 
+    @classmethod
+    def from_engine(cls, m: engine.RoundMetrics,
+                    i: Optional[int] = None) -> "RoundMetrics":
+        return cls(**engine.metrics_row(m, i))
+
 
 class HFLSimulation:
     """The paper's simulation: 64 clients, 4 edges, NOMA uplink, MNIST-like
-    classification."""
+    classification — now a thin shell holding a ``RoundState``."""
 
     def __init__(self, cfg, *, seed: int = 0, iid: bool = True,
                  policy: str = "fcea", noma_enabled: bool = True,
                  allocator: str = "mid", scheduler: str = "pdd",
                  fading_rho: float = 0.9, oma_quota_factor: float = 0.5):
+        if policy not in association.POLICIES:
+            raise ValueError(f"unknown association policy {policy!r}")
         self.cfg = cfg
-        self.policy = policy
-        self.noma_enabled = noma_enabled
-        self.allocator = allocator
-        self.scheduler = scheduler
-        self.rho = fading_rho
-        self.oma_quota_factor = oma_quota_factor
-        self.rng = np.random.default_rng(seed)
-        self.key = jax.random.key(seed)
-
-        self.topo = make_topology(self.rng, n_clients=cfg.n_clients,
-                                  n_edges=cfg.n_edges,
-                                  area_side_m=cfg.area_side_m)
-        self.data = federated.make_federated(
-            self.rng, n_clients=cfg.n_clients, dim=cfg.input_dim,
-            n_classes=cfg.n_classes, iid=iid,
-            min_samples=cfg.min_samples, max_samples=cfg.max_samples,
-            dirichlet_alpha=cfg.dirichlet_alpha,
-            noise=getattr(cfg, "data_noise", 1.2))
-        self.model = MLPClassifier(cfg.input_dim, cfg.hidden, cfg.n_classes)
-        self.key, k = jax.random.split(self.key)
-        self.global_params = self.model.init(k)
-        self.client_params = aggregation.replicate(self.global_params,
-                                                   cfg.n_clients)
-        self.staleness = staleness.init_staleness(cfg.n_clients)
-        self.round = 0
-        # coverage: generous enough that every client can reach ≥1 edge
-        self.coverage_m = cfg.area_side_m * 0.75
-        self._local_fit = _local_sgd(self.model, cfg.lr, cfg.tau1,
-                                     cfg.local_batch)
-        dist = jnp.asarray(self.topo["dist"])
-        self.key, k = jax.random.split(self.key)
-        self.gains = noma.rayleigh_gains(
-            k, dist, path_loss_exponent=cfg.path_loss_exponent)
+        self.spec = EngineSpec(policy=policy, allocator=allocator,
+                               scheduler=scheduler,
+                               noma_enabled=noma_enabled,
+                               fading_rho=fading_rho,
+                               oma_quota_factor=oma_quota_factor)
+        self._state, self.bundle, aux = engine.init_simulation(
+            cfg, seed=seed, iid=iid)
+        self.topo = aux["topo"]
+        self.data = aux["data"]
+        self.model = aux["model"]
+        self.rng = aux["rng"]
+        self.coverage_m = engine.coverage_radius(cfg)
         # DDPG agent (lazily trained by examples / benchmarks)
         self.agent: Optional[ddpg.DDPGState] = None
         self.agent_cfg: Optional[ddpg.DDPGConfig] = None
 
-    # -- per-round pieces -----------------------------------------------------
+    # -- state views (legacy attribute API) -----------------------------------
 
-    def _fade(self):
-        self.key, k = jax.random.split(self.key)
-        self.gains = noma.evolve_gains(
-            k, self.gains, jnp.asarray(self.topo["dist"]),
-            path_loss_exponent=self.cfg.path_loss_exponent, rho=self.rho)
+    @property
+    def state(self) -> RoundState:
+        return self._state
 
-    def _scores(self) -> np.ndarray:
-        """(N, M) fuzzy competency: per-edge CQ, shared DQ and MS.
+    @property
+    def policy(self) -> str:
+        return self.spec.policy
 
-        CQ is normalised in dB (Eq. 21 on log-gain): raw |h|² spans four
-        decades of path loss, so a linear V/MV map collapses all but the
-        nearest clients to 0 — the dB scale is what 'channel quality'
-        means in practice.
-        """
-        gains = np.asarray(self.gains)
-        n, m = gains.shape
-        db = 10.0 * np.log10(np.maximum(gains, 1e-30))
-        lo, hi = db.min(), db.max()
-        cq = np.asarray(fuzzy.normalize(
-            jnp.asarray(db - lo), float(max(hi - lo, 1e-9))))
-        dq = np.asarray(fuzzy.normalize(jnp.asarray(self.data.counts,
-                                                    dtype=np.float32),
-                                        float(self.cfg.max_samples)))
-        ms = np.asarray(fuzzy.normalize(
-            jnp.asarray(self.staleness, dtype=jnp.float32),
-            float(max(np.max(np.asarray(self.staleness)), 1))))
-        scores = np.zeros((n, m), np.float32)
-        for j in range(m):
-            scores[:, j] = np.asarray(
-                fuzzy.fuzzy_scores(jnp.asarray(np.ascontiguousarray(
-                    cq[:, j])), jnp.asarray(dq), jnp.asarray(ms)))
-        return scores
+    @property
+    def noma_enabled(self) -> bool:
+        return self.spec.noma_enabled
+
+    @property
+    def allocator(self) -> str:
+        return self.spec.allocator
+
+    @property
+    def scheduler(self) -> str:
+        return self.spec.scheduler
+
+    @property
+    def gains(self) -> jnp.ndarray:
+        return self._state.gains
+
+    @property
+    def staleness(self) -> jnp.ndarray:
+        return self._state.staleness
+
+    @property
+    def global_params(self):
+        return self._state.global_params
+
+    @property
+    def client_params(self):
+        return self._state.client_params
+
+    @property
+    def round(self) -> int:
+        return int(self._state.round_idx)
+
+    def _actor_params(self):
+        return self.agent.actor if self.agent is not None else None
+
+    # -- association snapshot (used by the DDPG trainer / benchmarks) ----------
 
     def _associate(self) -> np.ndarray:
-        # OMA admits fewer clients per edge: each needs an orthogonal
-        # channel slice (paper §V-B — "insufficient orchestrated clients")
-        quota = self.cfg.clients_per_edge
-        if not self.noma_enabled:
-            quota = max(1, int(quota * self.oma_quota_factor))
-        return association.associate(
-            self.policy, scores=self._scores(),
-            gains_to_edges=np.asarray(self.gains), dist=self.topo["dist"],
-            quota=quota,
-            coverage_radius_m=self.coverage_m, rng=self.rng)
-
-    def _allocate(self, assoc: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        """(p_w (N,), f_hz (N,)) per the configured allocator."""
-        cfg = self.cfg
-        n = cfg.n_clients
-        self.key, k = jax.random.split(self.key)
-        if self.allocator == "ddpg" and self.agent is not None:
-            e = env.NomaHflEnv(cfg, assoc, jnp.ones((cfg.n_edges,)),
-                               jnp.asarray(self.topo["dist"]),
-                               jnp.asarray(self.data.counts, jnp.float32))
-            obs = e._observe(self.gains)
-            act = ddpg.actor_apply(self.agent.actor, obs)
-            return e.decode_action(act)
-        if self.allocator == "rra":
-            a = jax.random.uniform(k, (2, n))
-            p = cfg.p_min_w + a[0] * (cfg.p_max_w - cfg.p_min_w)
-            f = cfg.f_min_hz + a[1] * (cfg.f_max_hz - cfg.f_min_hz)
-            return p, f
-        if self.allocator == "fpa":     # fixed power, optimised-ish freq
-            p = jnp.full((n,), 0.5 * (cfg.p_min_w + cfg.p_max_w))
-            f = jnp.full((n,), cfg.f_max_hz)
-            return p, f
-        if self.allocator == "fca":     # fixed computation, midpoint power
-            p = jnp.full((n,), 0.5 * (cfg.p_min_w + cfg.p_max_w))
-            f = jnp.full((n,), 0.5 * (cfg.f_min_hz + cfg.f_max_hz))
-            return p, f
-        # "mid": deterministic midpoint defaults
-        p = jnp.full((n,), 0.5 * (cfg.p_min_w + cfg.p_max_w))
-        f = jnp.full((n,), 0.5 * (cfg.f_min_hz + cfg.f_max_hz))
-        return p, f
-
-    def _schedule(self, assoc, p, f) -> Tuple[jnp.ndarray, cost.RoundCost]:
-        """Semi-synchronous edge selection (z) + final round cost."""
-        cfg = self.cfg
-        quota = max(1, int(round(cfg.semi_sync_fraction * cfg.n_edges)))
-        ones = jnp.ones((cfg.n_edges,))
-        rc_all = cost.round_cost(cfg, power_w=p, f_hz=f, gains=self.gains,
-                                 assoc=assoc, z=ones,
-                                 n_samples=jnp.asarray(self.data.counts,
-                                                       jnp.float32),
-                                 noma_enabled=self.noma_enabled)
-        if self.scheduler == "pdd":
-            t_cloud = jnp.full((cfg.n_edges,),
-                               cfg.edge_model_size_bits / cfg.edge_rate_bps)
-            U = jnp.max(rc_all.client_time_s)
-            res = pdd.pdd_schedule(rc_all.per_edge_energy_j, t_cloud, U,
-                                   lam_t=cfg.lambda_t, lam_e=cfg.lambda_e,
-                                   quota=quota)
-            z = res.z_binary
-        else:  # "fastest"
-            z = pdd.semi_sync_fastest(rc_all.per_edge_time_s, quota)
-        rc = cost.round_cost(cfg, power_w=p, f_hz=f, gains=self.gains,
-                             assoc=assoc, z=z,
-                             n_samples=jnp.asarray(self.data.counts,
-                                                   jnp.float32),
-                             noma_enabled=self.noma_enabled)
-        return z, rc
-
-    def _train_clients(self, assoc: jnp.ndarray, z: jnp.ndarray) -> None:
-        """τ₂ edge iterations of (local SGD + edge aggregation), then the
-        semi-synchronous cloud aggregation over the selected edges."""
-        cfg = self.cfg
-        counts = jnp.asarray(self.data.counts, jnp.float32)
-        x = jnp.asarray(self.data.x)
-        y = jnp.asarray(self.data.y)
-        selected = jnp.sum(assoc, axis=1) > 0
-
-        # associated clients start from the global model
-        edge_params = aggregation.replicate(self.global_params, cfg.n_edges)
-        client_params = aggregation.broadcast_to_clients(
-            None, assoc, edge_params, self.client_params)
-
-        for _ in range(cfg.tau2):
-            self.key, k = jax.random.split(self.key)
-            ks = jax.random.split(k, cfg.n_clients)
-            trained = self._local_fit(client_params, x, y, counts, ks)
-            # only associated clients actually train (others keep params)
-            client_params = jax.tree.map(
-                lambda new, old: jnp.where(
-                    selected.reshape((-1,) + (1,) * (new.ndim - 1)),
-                    new, old), trained, client_params)
-            edge_params = aggregation.edge_aggregate(client_params, assoc,
-                                                     counts)
-            client_params = aggregation.broadcast_to_clients(
-                None, assoc, edge_params, client_params)
-
-        edge_data = jnp.sum(assoc * counts[:, None], axis=0)      # (M,)
-        has_clients = (edge_data > 0).astype(z.dtype)
-        z_eff = z * has_clients
-        if float(jnp.sum(z_eff * edge_data)) > 0:
-            self.global_params = aggregation.cloud_aggregate(
-                edge_params, z_eff, edge_data)
-        self.client_params = client_params
+        """One-off association on the CURRENT state (does not advance it)."""
+        k = jax.random.split(self._state.key, 5)[2]   # round_step's assoc key
+        assoc = engine._associate(self.cfg, self.spec, k, self._state.gains,
+                                  self.bundle.dist, self.bundle.counts,
+                                  self._state.staleness)
+        return np.asarray(assoc)
 
     # -- public API -------------------------------------------------------------
 
     def run_round(self) -> RoundMetrics:
-        cfg = self.cfg
-        self._fade()
-        assoc_np = self._associate()
-        assoc = jnp.asarray(assoc_np, jnp.float32)
-        p, f = self._allocate(assoc)
-        z, rc = self._schedule(assoc, p, f)
-        self._train_clients(assoc, z)
+        self._state, m = engine.round_step_jit(
+            self.cfg, self.spec, self._state, self.bundle,
+            self._actor_params())
+        return RoundMetrics.from_engine(m)
 
-        selected = np.asarray(assoc_np).sum(axis=1) > 0
-        # Eq. 20: staleness resets only for clients whose edge was selected
-        z_np = np.asarray(z) > 0
-        effective = selected & z_np[np.argmax(assoc_np, axis=1)]
-        self.staleness = staleness.update_staleness(
-            self.staleness, jnp.asarray(effective))
-
-        acc = float(self.model.accuracy(self.global_params,
-                                        jnp.asarray(self.data.test_x),
-                                        jnp.asarray(self.data.test_y)))
-        loss = float(self.model.loss(self.global_params,
-                                     (jnp.asarray(self.data.test_x),
-                                      jnp.asarray(self.data.test_y))))
-        self.round += 1
-        return RoundMetrics(
-            round=self.round, accuracy=acc, loss=loss,
-            avg_staleness=float(jnp.mean(self.staleness.astype(jnp.float32))),
-            total_time_s=float(rc.total_time_s),
-            total_energy_j=float(rc.total_energy_j), cost=float(rc.cost),
-            n_associated=int(selected.sum()), z=np.asarray(z))
-
-    def run(self, n_rounds: int) -> list:
+    def run(self, n_rounds: int) -> List[RoundMetrics]:
         return [self.run_round() for _ in range(n_rounds)]
+
+    def run_scanned(self, n_rounds: int) -> List[RoundMetrics]:
+        """Same trajectory as ``run``, but as ONE compiled XLA program."""
+        self._state, ms = engine.run_scanned(
+            self.cfg, self.spec, self._state, self.bundle, n_rounds,
+            self._actor_params())
+        ms_host = jax.tree.map(np.asarray, ms)    # one transfer per leaf
+        return [RoundMetrics.from_engine(ms_host, i)
+                for i in range(n_rounds)]
 
     # -- DDPG training (paper Algorithm 2 driver) --------------------------------
 
@@ -328,21 +159,21 @@ class HFLSimulation:
         cfg = self.cfg
         assoc = jnp.asarray(self._associate(), jnp.float32)
         e = env.NomaHflEnv(cfg, assoc, jnp.ones((cfg.n_edges,)),
-                           jnp.asarray(self.topo["dist"]),
-                           jnp.asarray(self.data.counts, jnp.float32),
-                           fading_rho=self.rho)
+                           self.bundle.dist, self.bundle.counts,
+                           fading_rho=self.spec.fading_rho)
         dcfg = ddpg.DDPGConfig(state_dim=e.state_dim, action_dim=e.action_dim,
                                hidden=hidden, buffer_size=4096, batch_size=64)
-        self.key, k = jax.random.split(self.key)
+        key = self._state.key
+        key, k = jax.random.split(key)
         agent = ddpg.init_ddpg(k, dcfg)
         history: Dict[str, list] = {"episode_reward": []}
         total_steps = 0
         for ep in range(episodes):
-            self.key, k = jax.random.split(self.key)
+            key, k = jax.random.split(key)
             state, obs = e.reset(k)
             ep_reward = 0.0
             for t in range(steps_per_episode):
-                self.key, ka, kt = jax.random.split(self.key, 3)
+                key, ka, kt = jax.random.split(key, 3)
                 act = ddpg.select_action(ka, agent, obs)
                 state, obs2, reward, _ = e.step(state, act)
                 agent = ddpg.store(agent, dcfg, obs, act, reward, obs2)
@@ -353,4 +184,5 @@ class HFLSimulation:
                     agent, _ = ddpg.train_step(kt, agent, dcfg)
             history["episode_reward"].append(ep_reward / steps_per_episode)
         self.agent, self.agent_cfg = agent, dcfg
+        self._state = self._state._replace(key=key)
         return history

@@ -1,7 +1,7 @@
 """Client-edge association policy tests (paper §III-B last paragraph)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis or its absent-shim
 
 from repro.core import association
 

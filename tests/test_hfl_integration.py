@@ -45,6 +45,7 @@ def test_staleness_tracked():
     assert ms[-1].avg_staleness > 1.0
 
 
+@pytest.mark.slow
 def test_fcea_vs_rcea_staleness():
     """FCEA considers MS -> lower average staleness than RCEA over rounds
     (paper Fig. 12), with matched seeds."""
@@ -64,6 +65,7 @@ def test_oma_fewer_effective_rates():
     assert np.isfinite(mn.cost) and np.isfinite(mo.cost)
 
 
+@pytest.mark.slow
 def test_ddpg_training_loop():
     sim = HFLSimulation(SMALL, seed=6, iid=True, allocator="ddpg")
     hist = sim.train_ddpg(episodes=3, steps_per_episode=10, warmup=16,

@@ -1,0 +1,185 @@
+"""Pure-functional round engine parity + purity tests (DESIGN.md §2).
+
+(a) scanned vs eager rounds produce identical metrics for fixed seeds,
+(b) JAX FCEA conflict resolution matches the numpy ``_resolve`` oracle,
+(c) ``run_fleet(seeds)`` equals sequential per-seed scanned runs,
+(d) ``round_step`` lowers with no host callbacks on the gcea/rcea +
+    fastest-scheduler path,
+(e) ``fuzzy.score_matrix`` matches per-edge scoring.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.hfl_mnist import CONFIG
+from repro.core import association, engine, fuzzy
+from repro.core.hfl import HFLSimulation
+
+SMALL = dataclasses.replace(CONFIG, n_clients=16, n_edges=2,
+                            clients_per_edge=3, min_samples=60,
+                            max_samples=120, hidden=32, input_dim=64)
+
+
+# -- (a) eager == scanned ----------------------------------------------------
+
+@pytest.mark.parametrize("policy,scheduler", [("fcea", "pdd"),
+                                              ("gcea", "fastest")])
+def test_eager_matches_scanned(policy, scheduler):
+    rounds = 3
+    eager = HFLSimulation(SMALL, seed=0, iid=True, policy=policy,
+                          scheduler=scheduler)
+    scanned = HFLSimulation(SMALL, seed=0, iid=True, policy=policy,
+                            scheduler=scheduler)
+    me = eager.run(rounds)
+    ms = scanned.run_scanned(rounds)
+    for a, b in zip(me, ms):
+        assert a.round == b.round
+        assert a.n_associated == b.n_associated
+        np.testing.assert_array_equal(a.z, b.z)
+        np.testing.assert_allclose(a.accuracy, b.accuracy, rtol=1e-5)
+        np.testing.assert_allclose(a.loss, b.loss, rtol=1e-5)
+        np.testing.assert_allclose(a.cost, b.cost, rtol=1e-5)
+        np.testing.assert_allclose(a.avg_staleness, b.avg_staleness,
+                                   rtol=1e-6)
+    # the final states agree too, so the drivers are interchangeable
+    for le, ls in zip(jax.tree.leaves(eager.state.global_params),
+                      jax.tree.leaves(scanned.state.global_params)):
+        np.testing.assert_allclose(np.asarray(le), np.asarray(ls),
+                                   rtol=1e-5, atol=1e-6)
+
+
+# -- (b) JAX resolver == numpy oracle ---------------------------------------
+
+def test_resolve_jax_matches_numpy_oracle():
+    rng = np.random.default_rng(0)
+    for _ in range(40):
+        n = int(rng.integers(4, 24))
+        m = int(rng.integers(1, 5))
+        quota = int(rng.integers(1, 6))
+        dist = rng.uniform(10.0, 400.0, (n, m))
+        pref = rng.uniform(0.0, 100.0, (n, m))
+        cov = dist <= 350.0
+        order = np.argsort(-np.where(cov, pref, -np.inf), axis=0,
+                           kind="stable").T
+        want = association._resolve(order, dist, quota, cov)
+        got = np.asarray(association.resolve_jax(
+            jnp.asarray(order), jnp.asarray(dist), quota, jnp.asarray(cov)))
+        np.testing.assert_array_equal(got, want)
+
+
+def test_fcea_jax_matches_numpy_end_to_end():
+    rng = np.random.default_rng(1)
+    for trial in range(20):
+        n = int(rng.integers(4, 20))
+        m = int(rng.integers(1, 4))
+        quota = int(rng.integers(1, 5))
+        dist = rng.uniform(10.0, 400.0, (n, m))
+        scores = rng.uniform(0.0, 100.0, (n, m))
+        want = association.fcea(scores, dist, quota, 350.0)
+        got = np.asarray(association.associate_jax(
+            "fcea", scores=jnp.asarray(scores), gains=jnp.asarray(scores),
+            dist=jnp.asarray(dist), quota=quota, coverage_radius_m=350.0,
+            key=jax.random.key(trial)))
+        np.testing.assert_array_equal(got, want, err_msg=f"trial {trial}")
+
+
+def test_association_invariants_jax():
+    rng = np.random.default_rng(2)
+    key = jax.random.key(0)
+    for policy in ("fcea", "gcea", "rcea"):
+        n, m, quota = 18, 3, 2
+        dist = rng.uniform(10.0, 400.0, (n, m))
+        scores = rng.uniform(0.0, 100.0, (n, m))
+        assoc = np.asarray(association.associate_jax(
+            policy, scores=jnp.asarray(scores),
+            gains=jnp.asarray(scores * 1e-11), dist=jnp.asarray(dist),
+            quota=quota, coverage_radius_m=350.0, key=key))
+        assert (assoc.sum(axis=1) <= 1).all()
+        assert (assoc.sum(axis=0) <= quota).all()
+        for c, e in np.argwhere(assoc == 1):
+            assert dist[c, e] <= 350.0
+
+
+# -- (c) fleet == sequential -------------------------------------------------
+
+def test_fleet_matches_sequential():
+    seeds = (0, 1, 2)
+    rounds = 2
+    spec = engine.EngineSpec(policy="fcea", scheduler="pdd")
+    pairs = [engine.init_simulation(SMALL, seed=s)[:2] for s in seeds]
+    states, bundles = engine.stack_fleet(pairs)
+    _, fleet = engine.run_fleet(SMALL, spec, states, bundles, rounds)
+    for i, (st, bu) in enumerate(pairs):
+        _, seq = engine.run_scanned(SMALL, spec, st, bu, rounds)
+        np.testing.assert_allclose(np.asarray(fleet.loss[i]),
+                                   np.asarray(seq.loss), rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(fleet.cost[i]),
+                                   np.asarray(seq.cost), rtol=1e-5)
+        np.testing.assert_array_equal(np.asarray(fleet.z[i]),
+                                      np.asarray(seq.z))
+
+
+# -- (d) purity: no host callbacks in the lowered program --------------------
+
+@pytest.mark.parametrize("policy", ["gcea", "rcea"])
+def test_round_step_lowers_without_callbacks(policy):
+    spec = engine.EngineSpec(policy=policy, scheduler="fastest")
+    state, bundle, _ = engine.init_simulation(SMALL, seed=0)
+    txt = jax.jit(engine.round_step, static_argnums=(0, 1)).lower(
+        SMALL, spec, state, bundle).as_text()
+    assert "callback" not in txt
+    assert "CustomCall" not in txt
+
+
+# -- (e) fuzzy score matrix == per-edge scoring ------------------------------
+
+def test_score_matrix_matches_per_edge_loop():
+    rng = np.random.default_rng(3)
+    n, m = 10, 3
+    gains = jnp.asarray(rng.uniform(1e-12, 1e-8, (n, m)))
+    counts = jnp.asarray(rng.integers(60, 120, n), jnp.float32)
+    stale = jnp.asarray(rng.integers(1, 9, n), jnp.int32)
+    got = np.asarray(fuzzy.score_matrix(gains, counts, stale,
+                                        data_max=120.0))
+    db = 10.0 * np.log10(np.maximum(np.asarray(gains), 1e-30))
+    lo, hi = db.min(), db.max()
+    cq = np.asarray(fuzzy.normalize(jnp.asarray(db - lo),
+                                    float(max(hi - lo, 1e-9))))
+    dq = np.asarray(fuzzy.normalize(counts, 120.0))
+    ms = np.asarray(fuzzy.normalize(stale.astype(jnp.float32),
+                                    float(np.asarray(stale).max())))
+    for j in range(m):
+        want = np.asarray(fuzzy.fuzzy_scores(
+            jnp.asarray(cq[:, j]), jnp.asarray(dq), jnp.asarray(ms)))
+        np.testing.assert_allclose(got[:, j], want, rtol=1e-5, atol=1e-5)
+
+
+# -- apply_schedule == full recompute ---------------------------------------
+
+def test_apply_schedule_matches_recompute():
+    from repro.core import cost
+    rng = np.random.default_rng(4)
+    n, m = 8, 2
+    p = jnp.asarray(rng.uniform(0.01, 0.1, n))
+    f = jnp.asarray(rng.uniform(1e9, 1e10, n))
+    gains = jnp.asarray(rng.uniform(1e-12, 1e-9, (n, m)))
+    assoc = np.zeros((n, m), np.float32)
+    assoc[np.arange(n), rng.integers(0, m, n)] = 1.0
+    assoc = jnp.asarray(assoc)
+    samples = jnp.asarray(rng.integers(60, 120, n), jnp.float32)
+    z = jnp.asarray([1.0, 0.0])
+    rc_all = cost.round_cost(SMALL, power_w=p, f_hz=f, gains=gains,
+                             assoc=assoc, z=jnp.ones((m,)),
+                             n_samples=samples)
+    rc_masked = cost.apply_schedule(SMALL, rc_all, z)
+    rc_full = cost.round_cost(SMALL, power_w=p, f_hz=f, gains=gains,
+                              assoc=assoc, z=z, n_samples=samples)
+    np.testing.assert_allclose(float(rc_masked.total_time_s),
+                               float(rc_full.total_time_s), rtol=1e-6)
+    np.testing.assert_allclose(float(rc_masked.total_energy_j),
+                               float(rc_full.total_energy_j), rtol=1e-6)
+    np.testing.assert_allclose(float(rc_masked.cost), float(rc_full.cost),
+                               rtol=1e-6)
