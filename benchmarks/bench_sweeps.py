@@ -1,0 +1,110 @@
+"""Scenario-engine overhead + sweep-fleet throughput (DESIGN.md §6).
+
+Two questions:
+
+* what does the dynamic-world transition cost per round?  ``static`` vs
+  ``dynamic`` ``run_scanned`` rounds/sec at (N, M) = (256, 8);
+* what does the sweep machinery deliver?  a 3-scenario × 2-policy grid
+  (seeds vmapped per policy group) through ``sweeps.run_sweep``, reported
+  as aggregate simulated rounds/sec and compiles used.
+
+Writes BENCH_sweeps.json at the repo root so the perf trajectory is
+tracked across PRs.
+
+  PYTHONPATH=src python -m benchmarks.bench_sweeps [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+from typing import Dict
+
+import jax
+
+from benchmarks.common import emit
+from repro import sweeps
+from repro.configs.hfl_mnist import CONFIG
+from repro.core import engine
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_sweeps.json")
+
+N, M = 256, 8
+
+
+def _cfg():
+    return dataclasses.replace(CONFIG, n_clients=N, n_edges=M,
+                               clients_per_edge=4, min_samples=60,
+                               max_samples=120, hidden=16, input_dim=32,
+                               local_batch=16)
+
+
+def bench_engine_overhead(rounds: int) -> Dict[str, float]:
+    """static vs dynamic round_step throughput, same compiled-scan driver."""
+    cfg = _cfg()
+    out: Dict[str, float] = {}
+    for label, scenario, kind in (("static", None, "static"),
+                                  ("dynamic", "full_dynamic", "dynamic")):
+        spec = engine.EngineSpec(policy="gcea", scheduler="fastest",
+                                 scenario=kind)
+        state, bundle, _ = engine.init_simulation(cfg, seed=0,
+                                                  scenario=scenario)
+        jax.block_until_ready(
+            engine.run_scanned(cfg, spec, state, bundle, rounds))
+        t0 = time.perf_counter()
+        jax.block_until_ready(
+            engine.run_scanned(cfg, spec, state, bundle, rounds))
+        out[f"{label}_rps"] = round(rounds / (time.perf_counter() - t0), 3)
+    out["dynamic_overhead_pct"] = round(
+        100.0 * (out["static_rps"] / max(out["dynamic_rps"], 1e-9) - 1.0), 2)
+    out["rounds"] = rounds
+    return out
+
+
+def bench_sweep_fleet(rounds: int, seeds: int) -> Dict[str, float]:
+    """3 scenarios × 2 policies × seeds as grouped vmapped fleets."""
+    cfg = _cfg()
+    grid = sweeps.SweepGrid(
+        name="bench",
+        scenarios=("random_waypoint", "markov_dropout", "hetero_devices"),
+        policies=("fcea", "gcea"),
+        schedulers=("pdd",),
+        seeds=tuple(range(seeds)),
+        n_rounds=rounds)
+    # warm the compile caches so the timed pass measures throughput
+    sweeps.run_sweep(cfg, grid, write_json=False)
+    t0 = time.perf_counter()
+    summary = sweeps.run_sweep(cfg, grid, write_json=False)
+    wall = time.perf_counter() - t0
+    total_rounds = summary["n_cells"] * rounds
+    return {"cells": summary["n_cells"],
+            "compiles": summary["n_compiles"],
+            "rounds_per_cell": rounds,
+            "fleet_rps": round(total_rounds / wall, 3),
+            "wall_s": round(wall, 3)}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer rounds/seeds (CI-speed)")
+    args = ap.parse_args(argv)
+
+    rounds = 5 if args.quick else 15
+    seeds = 2 if args.quick else 4
+
+    overhead = bench_engine_overhead(rounds)
+    emit(f"sweeps_engine_n{N}_m{M}", 1e6 / overhead["dynamic_rps"], overhead)
+    fleet = bench_sweep_fleet(rounds, seeds)
+    emit("sweeps_fleet_3x2", 1e6 / fleet["fleet_rps"], fleet)
+
+    with open(OUT, "w") as fh:
+        json.dump({"size": [N, M], "engine": overhead, "fleet": fleet},
+                  fh, indent=2)
+    print(f"wrote {os.path.normpath(OUT)}")
+
+
+if __name__ == "__main__":
+    main()

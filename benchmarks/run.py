@@ -19,13 +19,16 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     from benchmarks import (bench_kernels, bench_roofline, bench_rounds,
-                            fig_avg_ms, fig_cost_vs_dn, fig_cost_vs_nm,
-                            fig_ddpg_cost, fig_hfl_convergence)
+                            bench_sweeps, fig_avg_ms, fig_cost_vs_dn,
+                            fig_cost_vs_nm, fig_ddpg_cost,
+                            fig_hfl_convergence)
     rounds = 4 if args.quick else 16
     episodes = 6 if args.quick else 15
     suites = [
         ("bench_rounds",
          lambda: bench_rounds.main(["--quick"] if args.quick else [])),
+        ("bench_sweeps",
+         lambda: bench_sweeps.main(["--quick"] if args.quick else [])),
         ("fig_hfl_convergence", lambda: fig_hfl_convergence.main(rounds)),
         ("fig_avg_ms", lambda: fig_avg_ms.main(rounds)),
         ("fig_ddpg_cost", lambda: fig_ddpg_cost.main(episodes)),

@@ -33,6 +33,10 @@ def main() -> int:
     ap.add_argument("--eager", action="store_true",
                     help="dispatch one jitted round at a time instead of "
                          "one scanned program for all rounds")
+    ap.add_argument("--scenario", default="static",
+                    help="dynamic-world preset (static, random_waypoint, "
+                         "markov_dropout, hetero_devices, mobile_flaky, "
+                         "full_dynamic, or a '+'-joined mixture)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -41,7 +45,8 @@ def main() -> int:
         max_samples=300, hidden=64, input_dim=196)
     sim = HFLSimulation(cfg, seed=args.seed, iid=not args.non_iid,
                         policy=args.policy, noma_enabled=not args.oma,
-                        allocator="ddpg" if args.ddpg else "mid")
+                        allocator="ddpg" if args.ddpg else "mid",
+                        scenario=args.scenario)
     if args.ddpg:
         print("training DDPG allocator ...")
         hist = sim.train_ddpg(episodes=8, steps_per_episode=30, warmup=64)
@@ -50,13 +55,14 @@ def main() -> int:
 
     print(f"policy={args.policy} noma={not args.oma} "
           f"iid={not args.non_iid} clients={cfg.n_clients} "
+          f"scenario={args.scenario} "
           f"driver={'eager' if args.eager else 'scanned'}")
     ms = sim.run(args.rounds) if args.eager else sim.run_scanned(args.rounds)
     for m in ms:
         print(f"round {m.round:3d}  acc={m.accuracy:.4f}  loss={m.loss:.4f}  "
               f"avgMS={m.avg_staleness:.2f}  T={m.total_time_s:.2f}s  "
               f"E={m.total_energy_j:.1f}J  cost={m.cost:.2f}  "
-              f"edges={m.z.astype(int).tolist()}")
+              f"avail={m.n_available}  edges={m.z.astype(int).tolist()}")
     return 0
 
 

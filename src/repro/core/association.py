@@ -177,14 +177,22 @@ POLICIES: Dict[str, PrefBuilder] = {
 
 def associate_jax(policy: str, *, scores: jnp.ndarray | None,
                   gains: jnp.ndarray, dist: jnp.ndarray, quota: int,
-                  coverage_radius_m: float, key) -> jnp.ndarray:
-    """JAX-native association (N, M) one-hot; pure, jit/vmap-safe."""
+                  coverage_radius_m: float, key,
+                  avail: jnp.ndarray | None = None) -> jnp.ndarray:
+    """JAX-native association (N, M) one-hot; pure, jit/vmap-safe.
+
+    ``avail`` (N,) is the scenario availability mask (DESIGN.md §6): an
+    unavailable client is treated as out of every edge's coverage, so no
+    policy can admit it and its quota slot goes to the next candidate.
+    """
     if policy not in POLICIES:
         raise ValueError(f"unknown association policy {policy!r}")
     pref = POLICIES[policy](scores, gains, key)
     if pref.ndim == 1:
         pref = jnp.broadcast_to(pref[:, None], dist.shape)
     coverage = dist <= coverage_radius_m
+    if avail is not None:
+        coverage = coverage & (avail > 0)[:, None]
     pref = jnp.where(coverage, pref, -jnp.inf)
     order = jnp.argsort(-pref, axis=0).T                       # (M, N)
     return resolve_jax(order, dist, quota, coverage)

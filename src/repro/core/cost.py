@@ -25,11 +25,17 @@ class RoundCost(NamedTuple):
     rates_bps: jnp.ndarray           # (N,) NOMA uplink rates
 
 
-def local_compute(cfg, f_hz: jnp.ndarray, n_samples: jnp.ndarray):
-    """Eqs. 4-5: per-client local training time and energy for τ₁ iterations."""
+def local_compute(cfg, f_hz: jnp.ndarray, n_samples: jnp.ndarray,
+                  capacitance: jnp.ndarray | None = None):
+    """Eqs. 4-5: per-client local training time and energy for τ₁ iterations.
+
+    ``capacitance`` (N,) overrides the homogeneous cfg.capacitance with the
+    per-device effective κ of a hetero_devices scenario (DESIGN.md §6).
+    """
     tau1 = cfg.tau1
+    kappa = cfg.capacitance if capacitance is None else capacitance
     t_cmp = tau1 * cfg.cycles_per_sample * n_samples / f_hz
-    e_cmp = tau1 * (cfg.capacitance / 2.0) * (f_hz ** 2) \
+    e_cmp = tau1 * (kappa / 2.0) * (f_hz ** 2) \
         * cfg.cycles_per_sample * n_samples
     return t_cmp, e_cmp
 
@@ -83,9 +89,10 @@ def apply_schedule(cfg, rc: RoundCost, z: jnp.ndarray) -> RoundCost:
 
 def round_cost(cfg, *, power_w: jnp.ndarray, f_hz: jnp.ndarray,
                gains: jnp.ndarray, assoc: jnp.ndarray, z: jnp.ndarray,
-               n_samples: jnp.ndarray, noma_enabled: bool = True) -> RoundCost:
+               n_samples: jnp.ndarray, noma_enabled: bool = True,
+               capacitance: jnp.ndarray | None = None) -> RoundCost:
     """Full Eq. 23a cost for one global round."""
-    t_cmp, e_cmp = local_compute(cfg, f_hz, n_samples)
+    t_cmp, e_cmp = local_compute(cfg, f_hz, n_samples, capacitance)
     t_com, e_com, rates = uplink(cfg, power_w, gains, assoc,
                                  noma_enabled=noma_enabled)
     associated = jnp.sum(assoc, axis=1) > 0

@@ -39,6 +39,8 @@ from repro.core import (aggregation, association, cost, env, fuzzy, noma,
                         pdd, staleness)
 from repro.data import federated
 from repro.models.mlp import MLPClassifier
+from repro import scenarios
+from repro.scenarios import ScenarioSpec, ScenarioState
 
 Params = Any
 
@@ -56,6 +58,10 @@ class EngineSpec:
     noma_enabled: bool = True
     fading_rho: float = 0.9
     oma_quota_factor: float = 0.5
+    # scenario transition KIND only (a trace-time switch into
+    # scenarios.TRANSITIONS) — the scenario's numbers live in the
+    # ScenarioState arrays, so different parameterisations share a compile.
+    scenario: str = "static"
 
 
 class RoundBundle(NamedTuple):
@@ -76,6 +82,7 @@ class RoundState(NamedTuple):
     staleness: jnp.ndarray   # (N,) int32 — A_n
     key: jnp.ndarray         # PRNG key
     round_idx: jnp.ndarray   # () int32
+    scenario: ScenarioState  # per-round world state (DESIGN.md §6)
 
 
 class RoundMetrics(NamedTuple):
@@ -88,6 +95,7 @@ class RoundMetrics(NamedTuple):
     total_energy_j: jnp.ndarray
     cost: jnp.ndarray
     n_associated: jnp.ndarray
+    n_available: jnp.ndarray
     z: jnp.ndarray           # (M,)
 
 
@@ -130,10 +138,16 @@ def quota_for(cfg, spec: EngineSpec) -> int:
 # Initialisation (host side: numpy RNG builds the scenario once)
 # ---------------------------------------------------------------------------
 
-def init_simulation(cfg, *, seed: int = 0, iid: bool = True
+def init_simulation(cfg, *, seed: int = 0, iid: bool = True,
+                    scenario: "ScenarioSpec | str | None" = None
                     ) -> Tuple[RoundState, RoundBundle, Dict[str, Any]]:
     """Build one scenario: returns (state, bundle, aux) where aux carries
-    the host-side objects (topo dict, FederatedData, model, numpy rng)."""
+    the host-side objects (topo dict, FederatedData, model, numpy rng).
+
+    ``scenario`` (a ScenarioSpec, preset name or kind string) parameterises
+    the dynamic world; its numpy draws happen AFTER topology + data, so the
+    same seed yields the same federation under every scenario."""
+    sspec = scenarios.preset(scenario)
     rng = np.random.default_rng(seed)
     key = jax.random.key(seed)
     topo = make_topology(rng, n_clients=cfg.n_clients, n_edges=cfg.n_edges,
@@ -157,7 +171,8 @@ def init_simulation(cfg, *, seed: int = 0, iid: bool = True
         gains=gains,
         staleness=staleness.init_staleness(cfg.n_clients),
         key=key,
-        round_idx=jnp.asarray(0, jnp.int32))
+        round_idx=jnp.asarray(0, jnp.int32),
+        scenario=scenarios.init_scenario(cfg, sspec, rng, topo))
     bundle = RoundBundle(
         dist=dist,
         x=jnp.asarray(data.x),
@@ -165,7 +180,8 @@ def init_simulation(cfg, *, seed: int = 0, iid: bool = True
         counts=jnp.asarray(data.counts, jnp.float32),
         test_x=jnp.asarray(data.test_x),
         test_y=jnp.asarray(data.test_y))
-    aux = {"topo": topo, "data": data, "model": model, "rng": rng}
+    aux = {"topo": topo, "data": data, "model": model, "rng": rng,
+           "scenario_spec": sspec}
     return state, bundle, aux
 
 
@@ -202,9 +218,10 @@ def _local_sgd(model: MLPClassifier, lr: float, tau1: int, batch_size: int):
     return jax.vmap(one_client)
 
 
-def _associate(cfg, spec: EngineSpec, key, gains, dist, counts, stale
-               ) -> jnp.ndarray:
-    """(N, M) one-hot association, fully in JAX."""
+def _associate(cfg, spec: EngineSpec, key, gains, dist, counts, stale,
+               avail: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """(N, M) one-hot association, fully in JAX.  ``avail`` (N,) masks
+    unavailable clients out of coverage (scenario dropout)."""
     scores = None
     if spec.policy == "fcea":
         scores = fuzzy.score_matrix(gains, counts, stale,
@@ -212,18 +229,21 @@ def _associate(cfg, spec: EngineSpec, key, gains, dist, counts, stale
     return association.associate_jax(
         spec.policy, scores=scores, gains=gains, dist=dist,
         quota=quota_for(cfg, spec),
-        coverage_radius_m=coverage_radius(cfg), key=key)
+        coverage_radius_m=coverage_radius(cfg), key=key, avail=avail)
 
 
 def _allocate(cfg, spec: EngineSpec, key, assoc, gains, counts,
-              actor_params) -> Tuple[jnp.ndarray, jnp.ndarray]:
+              actor_params, scen: Optional[ScenarioState] = None
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """(p_w (N,), f_hz (N,)) per the configured allocator (§IV-C)."""
     n = cfg.n_clients
     mid_p = jnp.full((n,), 0.5 * (cfg.p_min_w + cfg.p_max_w))
     mid_f = jnp.full((n,), 0.5 * (cfg.f_min_hz + cfg.f_max_hz))
     if spec.allocator == "ddpg" and actor_params is not None:
         from repro.core import ddpg                 # cycle-free lazy import
-        obs = env.observe(assoc, gains, counts)
+        # in a dynamic scenario the observation gains an availability slice
+        obs = env.observe(assoc, gains, counts,
+                          avail=None if scen is None else scen.avail)
         act = ddpg.actor_apply(actor_params, obs)
         return env.decode_action(cfg, act, n)
     if spec.allocator == "rra":
@@ -298,29 +318,65 @@ def _train(cfg, model: MLPClassifier, key, state: RoundState,
 # The round step + compiled drivers
 # ---------------------------------------------------------------------------
 
+def round_keys(spec: EngineSpec, key) -> Tuple[jnp.ndarray, ...]:
+    """THE round's PRNG layout: (carry, scenario?, fade, assoc, alloc, train).
+
+    The scenario key exists only on dynamic paths — the static path keeps
+    the PR-1 5-way split bit-for-bit (golden parity depends on it).  Both
+    ``round_step`` and the wrapper's association snapshot derive their keys
+    from here, so the layout lives in exactly one place.
+    """
+    if spec.scenario != "static":
+        return jax.random.split(key, 6)
+    key, k_fade, k_assoc, k_alloc, k_train = jax.random.split(key, 5)
+    return key, None, k_fade, k_assoc, k_alloc, k_train
+
+
 def round_step(cfg, spec: EngineSpec, state: RoundState,
                bundle: RoundBundle, actor_params: Optional[Params] = None
                ) -> Tuple[RoundState, RoundMetrics]:
     """One pure global round; jit/scan/vmap to taste."""
     model = MLPClassifier(cfg.input_dim, cfg.hidden, cfg.n_classes)
-    key, k_fade, k_assoc, k_alloc, k_train = jax.random.split(state.key, 5)
 
-    # 1. channel fading
-    gains = noma.evolve_gains(k_fade, state.gains, bundle.dist,
+    # 0. scenario transition (DESIGN.md §6).  The static kind keeps the
+    #    PR-1 key-split and data flow bit-for-bit (no scenario key is
+    #    consumed, distances come from the bundle) — the parity tests
+    #    pin this against golden trajectories.
+    dynamic = spec.scenario != "static"
+    key, k_scen, k_fade, k_assoc, k_alloc, k_train = round_keys(spec,
+                                                                state.key)
+    if dynamic:
+        scen = scenarios.advance(cfg, spec.scenario, k_scen, state.scenario)
+        dist, avail = scen.dist, scen.avail
+    else:
+        scen = state.scenario
+        dist, avail = bundle.dist, None
+
+    # 1. channel fading (distances may have just moved)
+    gains = noma.evolve_gains(k_fade, state.gains, dist,
                               path_loss_exponent=cfg.path_loss_exponent,
                               rho=spec.fading_rho)
-    # 2. fuzzy scoring + association (pure JAX — no host loop)
-    assoc = _associate(cfg, spec, k_assoc, gains, bundle.dist,
-                       bundle.counts, state.staleness).astype(jnp.float32)
-    # 3. resource allocation
+    # 2. fuzzy scoring + association (pure JAX — no host loop);
+    #    unavailable clients are out of coverage this round
+    assoc = _associate(cfg, spec, k_assoc, gains, dist, bundle.counts,
+                       state.staleness, avail).astype(jnp.float32)
+    if dynamic:
+        # explicit Eq. 11/17/23a mask: even a policy that ignored ``avail``
+        # cannot train on, aggregate or bill a dropped client
+        assoc = assoc * avail[:, None]
+    # 3. resource allocation, clamped to the device class caps
     p, f = _allocate(cfg, spec, k_alloc, assoc, gains, bundle.counts,
-                     actor_params)
+                     actor_params, scen if dynamic else None)
+    if dynamic:
+        p = jnp.minimum(p, scen.p_max_w)
+        f = jnp.minimum(f, scen.f_max_hz)
     # 4. ONE cost evaluation at z=1, reused by the scheduler and the final
     #    masked round cost (Eqs. 18-19 depend on z only through a mask)
     rc_all = cost.round_cost(cfg, power_w=p, f_hz=f, gains=gains,
                              assoc=assoc, z=jnp.ones((cfg.n_edges,)),
                              n_samples=bundle.counts,
-                             noma_enabled=spec.noma_enabled)
+                             noma_enabled=spec.noma_enabled,
+                             capacitance=scen.kappa if dynamic else None)
     z = _schedule(cfg, spec, rc_all)
     rc = cost.apply_schedule(cfg, rc_all, z)
     # 5. τ₂·τ₁ training + hierarchical aggregation
@@ -332,6 +388,8 @@ def round_step(cfg, spec: EngineSpec, state: RoundState,
     new_stale = staleness.update_staleness(state.staleness, effective)
 
     round_idx = state.round_idx + 1
+    n_avail = (jnp.sum(avail > 0, dtype=jnp.int32) if dynamic
+               else jnp.asarray(cfg.n_clients, jnp.int32))
     metrics = RoundMetrics(
         round=round_idx,
         accuracy=model.accuracy(global_params, bundle.test_x, bundle.test_y),
@@ -341,9 +399,10 @@ def round_step(cfg, spec: EngineSpec, state: RoundState,
         total_energy_j=rc.total_energy_j,
         cost=rc.cost,
         n_associated=jnp.sum(selected.astype(jnp.int32)),
+        n_available=n_avail,
         z=z)
     new_state = RoundState(global_params, client_params, gains, new_stale,
-                           key, round_idx)
+                           key, round_idx, scen)
     return new_state, metrics
 
 
@@ -392,5 +451,6 @@ def metrics_row(metrics: RoundMetrics, i: Optional[int] = None):
         "total_energy_j": float(pick(metrics.total_energy_j)),
         "cost": float(pick(metrics.cost)),
         "n_associated": int(pick(metrics.n_associated)),
+        "n_available": int(pick(metrics.n_available)),
         "z": np.asarray(pick(metrics.z)),
     }

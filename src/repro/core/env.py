@@ -21,6 +21,7 @@ from repro.core import cost, noma
 class EnvState(NamedTuple):
     gains: jnp.ndarray       # (N, M) current |h|²
     key: jnp.ndarray
+    avail: jnp.ndarray | None = None   # (N,) evolving availability (§6)
 
 
 # ---------------------------------------------------------------------------
@@ -31,15 +32,24 @@ class EnvState(NamedTuple):
 # ---------------------------------------------------------------------------
 
 def observe(assoc: jnp.ndarray, gains: jnp.ndarray,
-            n_samples: jnp.ndarray) -> jnp.ndarray:
+            n_samples: jnp.ndarray,
+            avail: jnp.ndarray | None = None) -> jnp.ndarray:
     """State S_j: per-client (log-gain to own edge, data share), masked to
-    the associated clients and flattened to (2N,)."""
+    the associated clients and flattened to (2N,).
+
+    In a dynamic scenario (DESIGN.md §6) the observation gains a scenario
+    slice: the availability mask, giving (3N,) — the agent sees which
+    clients the world dropped this round.
+    """
     associated = jnp.sum(assoc, axis=1) > 0
     own_gain = jnp.sum(gains * assoc, axis=1)                   # (N,)
     g = jnp.log10(jnp.maximum(own_gain, 1e-20)) / 10.0 + 1.0
     d = n_samples / jnp.maximum(jnp.max(n_samples), 1.0)
-    return jnp.concatenate([jnp.where(associated, g, 0.0),
-                            jnp.where(associated, d, 0.0)])
+    parts = [jnp.where(associated, g, 0.0),
+             jnp.where(associated, d, 0.0)]
+    if avail is not None:
+        parts.append(avail.astype(g.dtype))
+    return jnp.concatenate(parts)
 
 
 def decode_action(cfg, action: jnp.ndarray, n_clients: int
@@ -56,27 +66,61 @@ class NomaHflEnv:
 
     def __init__(self, cfg, assoc: jnp.ndarray, z: jnp.ndarray,
                  dist: jnp.ndarray, n_samples: jnp.ndarray,
-                 fading_rho: float = 0.9):
+                 fading_rho: float = 0.9,
+                 avail: jnp.ndarray | None = None,
+                 kappa: jnp.ndarray | None = None,
+                 p_max_w: jnp.ndarray | None = None,
+                 f_max_hz: jnp.ndarray | None = None,
+                 noma_enabled: bool = True,
+                 p_drop: jnp.ndarray | None = None,
+                 p_return: jnp.ndarray | None = None):
         self.cfg = cfg
         self.assoc = assoc                   # (N, M) one-hot
         self.z = z                           # (M,)
         self.dist = dist                     # (N, M)
         self.n_samples = n_samples           # (N,)
         self.rho = fading_rho
+        self.noma_enabled = noma_enabled
+        # scenario slices (DESIGN.md §6): the env must charge the SAME cost
+        # the engine will bill at deployment — per-device κ and (p, f) caps
+        # — and, with (p_drop, p_return), evolve the availability chain
+        # between slots so the actor trains on a VARYING third obs block
+        self.kappa = kappa                   # (N,) or None
+        self.p_max_w = p_max_w               # (N,) or None
+        self.f_max_hz = f_max_hz             # (N,) or None
+        self.p_drop = p_drop                 # (N,) or None
+        self.p_return = p_return             # (N,) or None
         self.n_clients = assoc.shape[0]
+        has_avail = avail is not None or p_drop is not None
+        self.avail0 = (avail if avail is not None else
+                       jnp.ones((self.n_clients,), jnp.float32)
+                       ) if has_avail else None
         self.associated = jnp.sum(assoc, axis=1) > 0
-        # state: per-client (gain to own edge, data size), flattened
-        self.state_dim = 2 * self.n_clients
+        # state: per-client (gain to own edge, data size)[, availability]
+        self.state_dim = (2 + has_avail) * self.n_clients
         self.action_dim = 2 * self.n_clients
 
     # -- helpers ---------------------------------------------------------------
 
-    def _observe(self, gains: jnp.ndarray) -> jnp.ndarray:
-        return observe(self.assoc, gains, self.n_samples)
+    def _masked_assoc(self, avail: jnp.ndarray | None) -> jnp.ndarray:
+        """The engine's §6 contract: a dropped client is out of the
+        association — for the observation AND the bill."""
+        return self.assoc if avail is None else self.assoc * avail[:, None]
+
+    def _observe(self, gains: jnp.ndarray,
+                 avail: jnp.ndarray | None) -> jnp.ndarray:
+        return observe(self._masked_assoc(avail), gains, self.n_samples,
+                       avail)
 
     def decode_action(self, action: jnp.ndarray
                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        return decode_action(self.cfg, action, self.n_clients)
+        p, f = decode_action(self.cfg, action, self.n_clients)
+        # device-class caps, mirroring the engine's clamp in round_step
+        if self.p_max_w is not None:
+            p = jnp.minimum(p, self.p_max_w)
+        if self.f_max_hz is not None:
+            f = jnp.minimum(f, self.f_max_hz)
+        return p, f
 
     # -- gym-like API ------------------------------------------------------------
 
@@ -84,22 +128,33 @@ class NomaHflEnv:
         k1, k2 = jax.random.split(key)
         gains = noma.rayleigh_gains(
             k1, self.dist, path_loss_exponent=self.cfg.path_loss_exponent)
-        state = EnvState(gains, k2)
-        return state, self._observe(gains)
+        state = EnvState(gains, k2, self.avail0)
+        return state, self._observe(gains, state.avail)
 
     def step(self, state: EnvState, action: jnp.ndarray
              ) -> Tuple[EnvState, jnp.ndarray, jnp.ndarray, cost.RoundCost]:
         p, f = self.decode_action(action)
+        # bill the availability the agent observed when acting
+        assoc = self._masked_assoc(state.avail)
         rc = cost.round_cost(self.cfg, power_w=p, f_hz=f, gains=state.gains,
-                             assoc=self.assoc, z=self.z,
-                             n_samples=self.n_samples)
+                             assoc=assoc, z=self.z,
+                             n_samples=self.n_samples,
+                             noma_enabled=self.noma_enabled,
+                             capacitance=self.kappa)
         reward = -rc.cost                                        # Eq. 37
-        k1, k2 = jax.random.split(state.key)
+        if self.p_drop is not None:
+            k1, k2, k3 = jax.random.split(state.key, 3)
+            u = jax.random.uniform(k3, state.avail.shape)
+            avail = jnp.where(state.avail > 0, u >= self.p_drop,
+                              u < self.p_return).astype(jnp.float32)
+        else:
+            k1, k2 = jax.random.split(state.key)
+            avail = state.avail
         gains = noma.evolve_gains(
             k1, state.gains, self.dist,
             path_loss_exponent=self.cfg.path_loss_exponent, rho=self.rho)
-        new_state = EnvState(gains, k2)
-        return new_state, self._observe(gains), reward, rc
+        new_state = EnvState(gains, k2, avail)
+        return new_state, self._observe(gains, avail), reward, rc
 
 
 # ---------------------------------------------------------------------------
@@ -112,19 +167,27 @@ def rra_action(key, n_clients: int) -> jnp.ndarray:
 
 
 def _grid_best(e: "NomaHflEnv", gains: jnp.ndarray, fixed_axis: int,
-               fixed_frac: float = 0.5, n_grid: int = 16) -> jnp.ndarray:
+               fixed_frac: float = 0.5, n_grid: int = 16,
+               avail: jnp.ndarray | None = None) -> jnp.ndarray:
     """Grid-optimise the free (shared) fraction while the other axis is
     fixed — the paper's FPA/FCA benchmarks optimise their free variable
-    'in the same way as DDPG-RA' (§V-D); a 1-D grid is the stand-in."""
+    'in the same way as DDPG-RA' (§V-D); a 1-D grid is the stand-in.
+    Pass the slot's ``avail`` (EnvState.avail) in dropout scenarios so the
+    baseline optimises the masked bill ``step()`` actually charges."""
     n = e.n_clients
     fracs = jnp.linspace(0.0, 1.0, n_grid)
+    assoc = e.assoc if avail is None else e.assoc * avail[:, None]
 
     def cost_of(frac):
         a = jnp.full((2, n), fixed_frac).at[1 - fixed_axis].set(frac) \
             .reshape(-1)
         p, f = e.decode_action(a)
+        # optimise the SAME bill step() charges (NOMA switch + device κ +
+        # availability mask)
         rc = cost.round_cost(e.cfg, power_w=p, f_hz=f, gains=gains,
-                             assoc=e.assoc, z=e.z, n_samples=e.n_samples)
+                             assoc=assoc, z=e.z, n_samples=e.n_samples,
+                             noma_enabled=e.noma_enabled,
+                             capacitance=e.kappa)
         return rc.cost
 
     costs = jax.vmap(cost_of)(fracs)
@@ -133,16 +196,18 @@ def _grid_best(e: "NomaHflEnv", gains: jnp.ndarray, fixed_axis: int,
     return a.reshape(-1)
 
 
-def fpa_best_action(e: "NomaHflEnv", gains: jnp.ndarray) -> jnp.ndarray:
+def fpa_best_action(e: "NomaHflEnv", gains: jnp.ndarray,
+                    avail: jnp.ndarray | None = None) -> jnp.ndarray:
     """Fixed power at p_max (the conventional FPA choice [18]);
     grid-optimised shared CPU frequency."""
-    return _grid_best(e, gains, fixed_axis=0, fixed_frac=1.0)
+    return _grid_best(e, gains, fixed_axis=0, fixed_frac=1.0, avail=avail)
 
 
-def fca_best_action(e: "NomaHflEnv", gains: jnp.ndarray) -> jnp.ndarray:
+def fca_best_action(e: "NomaHflEnv", gains: jnp.ndarray,
+                    avail: jnp.ndarray | None = None) -> jnp.ndarray:
     """Fixed CPU frequency at f_max (the conventional FCA choice [19]);
     grid-optimised shared power."""
-    return _grid_best(e, gains, fixed_axis=1, fixed_frac=1.0)
+    return _grid_best(e, gains, fixed_axis=1, fixed_frac=1.0, avail=avail)
 
 
 def fpa_action(n_clients: int, f_frac: jnp.ndarray) -> jnp.ndarray:

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import scenarios
 from repro.core import association, ddpg, engine, env, fuzzy
 from repro.core.engine import (EngineSpec, RoundBundle, RoundState,
                                make_topology)
@@ -41,6 +42,7 @@ class RoundMetrics:
     total_energy_j: float
     cost: float
     n_associated: int
+    n_available: int
     z: np.ndarray
 
     @classmethod
@@ -56,17 +58,21 @@ class HFLSimulation:
     def __init__(self, cfg, *, seed: int = 0, iid: bool = True,
                  policy: str = "fcea", noma_enabled: bool = True,
                  allocator: str = "mid", scheduler: str = "pdd",
-                 fading_rho: float = 0.9, oma_quota_factor: float = 0.5):
+                 fading_rho: float = 0.9, oma_quota_factor: float = 0.5,
+                 scenario=None):
         if policy not in association.POLICIES:
             raise ValueError(f"unknown association policy {policy!r}")
         self.cfg = cfg
+        sspec = scenarios.preset(scenario)
+        self.scenario_spec = sspec
         self.spec = EngineSpec(policy=policy, allocator=allocator,
                                scheduler=scheduler,
                                noma_enabled=noma_enabled,
                                fading_rho=fading_rho,
-                               oma_quota_factor=oma_quota_factor)
+                               oma_quota_factor=oma_quota_factor,
+                               scenario=sspec.engine_kind())
         self._state, self.bundle, aux = engine.init_simulation(
-            cfg, seed=seed, iid=iid)
+            cfg, seed=seed, iid=iid, scenario=sspec)
         self.topo = aux["topo"]
         self.data = aux["data"]
         self.model = aux["model"]
@@ -125,10 +131,13 @@ class HFLSimulation:
 
     def _associate(self) -> np.ndarray:
         """One-off association on the CURRENT state (does not advance it)."""
-        k = jax.random.split(self._state.key, 5)[2]   # round_step's assoc key
-        assoc = engine._associate(self.cfg, self.spec, k, self._state.gains,
-                                  self.bundle.dist, self.bundle.counts,
-                                  self._state.staleness)
+        dynamic = self.spec.scenario != "static"
+        k = engine.round_keys(self.spec, self._state.key)[3]
+        scen = self._state.scenario
+        assoc = engine._associate(
+            self.cfg, self.spec, k, self._state.gains,
+            scen.dist if dynamic else self.bundle.dist, self.bundle.counts,
+            self._state.staleness, scen.avail if dynamic else None)
         return np.asarray(assoc)
 
     # -- public API -------------------------------------------------------------
@@ -158,9 +167,22 @@ class HFLSimulation:
         """Train the DDPG allocator on the current association's env."""
         cfg = self.cfg
         assoc = jnp.asarray(self._associate(), jnp.float32)
+        # dynamic scenarios add the availability slice to the observation
+        # AND the device-class cost surface (κ, p/f caps): the actor must
+        # train on the same state and the same bill the engine uses
+        dynamic = self.spec.scenario != "static"
+        scen = self._state.scenario
         e = env.NomaHflEnv(cfg, assoc, jnp.ones((cfg.n_edges,)),
-                           self.bundle.dist, self.bundle.counts,
-                           fading_rho=self.spec.fading_rho)
+                           scen.dist if dynamic else self.bundle.dist,
+                           self.bundle.counts,
+                           fading_rho=self.spec.fading_rho,
+                           avail=scen.avail if dynamic else None,
+                           kappa=scen.kappa if dynamic else None,
+                           p_max_w=scen.p_max_w if dynamic else None,
+                           f_max_hz=scen.f_max_hz if dynamic else None,
+                           noma_enabled=self.spec.noma_enabled,
+                           p_drop=scen.p_drop if dynamic else None,
+                           p_return=scen.p_return if dynamic else None)
         dcfg = ddpg.DDPGConfig(state_dim=e.state_dim, action_dim=e.action_dim,
                                hidden=hidden, buffer_size=4096, batch_size=64)
         key = self._state.key

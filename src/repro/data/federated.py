@@ -30,7 +30,9 @@ class FederatedData:
 
 def _quantities(rng: np.random.Generator, n_clients: int, lo: int, hi: int
                 ) -> np.ndarray:
-    return rng.integers(lo, hi + 1, n_clients)
+    # every client owns at least one sample (a zero-data client would make
+    # the engine's masked batch indexing and Eq. 11 weights degenerate)
+    return np.maximum(rng.integers(lo, hi + 1, n_clients), 1)
 
 
 def make_federated(rng: np.random.Generator, *, n_clients: int,
@@ -64,23 +66,42 @@ def make_federated(rng: np.random.Generator, *, n_clients: int,
         by_class = [np.where(pool_y == k)[0] for k in range(n_classes)]
         for k in range(n_classes):
             rng.shuffle(by_class[k])
+        sizes = np.asarray([len(b) for b in by_class], np.int64)
+        if sizes.sum() == 0:
+            raise ValueError("empty sample pool for the Dirichlet partition")
         class_ptr = np.zeros(n_classes, np.int64)
         for c in range(n_clients):
             mix = rng.dirichlet(np.full(n_classes, dirichlet_alpha))
-            per_class = np.floor(mix * counts[c]).astype(np.int64)
-            per_class[np.argmax(per_class)] += counts[c] - per_class.sum()
+            quota = mix * counts[c]
+            per_class = np.floor(quota).astype(np.int64)
+            # flooring under-fills the drawn quantity D_n by up to
+            # n_classes-1 samples; classes absent from the pool can't
+            # contribute at all.  Top the deficit back up over non-empty
+            # classes by largest fractional remainder, so every client gets
+            # EXACTLY its drawn counts[c] (≥ 1 by _quantities).
+            per_class[sizes == 0] = 0
+            eligible = np.flatnonzero(sizes > 0)
+            order = eligible[np.argsort(-(quota[eligible] % 1.0),
+                                        kind="stable")]
+            deficit = int(counts[c] - per_class.sum())
+            if deficit > 0:
+                add = np.bincount(np.arange(deficit) % len(order),
+                                  minlength=len(order))
+                per_class[order] += add
             taken = []
             for k in range(n_classes):
+                need = int(per_class[k])
+                if need == 0:
+                    continue
                 avail = by_class[k]
                 start = class_ptr[k]
-                need = per_class[k]
                 idx = [avail[(start + i) % len(avail)] for i in range(need)]
-                class_ptr[k] = (start + need) % max(len(avail), 1)
+                class_ptr[k] = (start + need) % len(avail)
                 taken.extend(idx)
-            taken = np.asarray(taken[:counts[c]], np.int64)
+            taken = np.asarray(taken, np.int64)
             rng.shuffle(taken)
             x[c, :len(taken)] = pool_x[taken]
             y[c, :len(taken)] = pool_y[taken]
-            counts[c] = len(taken)
+            assert len(taken) == counts[c]
 
     return FederatedData(x, y, counts.astype(np.int64), test_x, test_y)

@@ -1,0 +1,10 @@
+from repro.scenarios.base import (PRESETS, TRANSITIONS, ScenarioSpec,
+                                  ScenarioState, advance, advance_dynamic,
+                                  init_scenario, preset, register_transition,
+                                  static_transition)
+
+__all__ = [
+    "PRESETS", "TRANSITIONS", "ScenarioSpec", "ScenarioState", "advance",
+    "advance_dynamic", "init_scenario", "preset", "register_transition",
+    "static_transition",
+]

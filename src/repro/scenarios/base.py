@@ -1,0 +1,274 @@
+"""Dynamic-scenario subsystem (DESIGN.md §6).
+
+The paper motivates the DDPG allocator with *time-varying environments*,
+but in the PR-1 engine only the channel fading evolves: topology, coverage
+and client capability are frozen at ``init_simulation``.  This package
+makes the rest of the world move, as a **pure per-round transition** that
+lives inside the jitted ``round_step``:
+
+    advance(cfg, kind, key, ScenarioState) -> ScenarioState'
+
+* ``ScenarioState`` — the per-client world state that evolves between
+  global rounds: positions (→ client-edge distances), a two-state Markov
+  availability mask, and the device class (per-client ``f_max``/``p_max``
+  caps and effective-capacitance κ).  A pytree, so it rides in the
+  ``RoundState`` carry and scans/vmaps with the rest of the engine.
+* ``ScenarioSpec`` — host-side init configuration only.  Its numbers are
+  baked into ScenarioState *arrays* at init time, so two scenarios with
+  different speeds / drop rates / device mixes share ONE compiled program:
+  the engine's static switch is just the transition *kind* string.
+
+Built-in kinds (all parameterised through the state, so any mixture
+batches into a single ``run_fleet`` compile):
+
+* ``static``          — identity; bit-for-bit the PR-1 engine.
+* ``random_waypoint`` — clients walk toward uniformly re-drawn waypoints
+  at per-client speeds; coverage and the nearest edge change every round.
+* ``markov_dropout``  — two-state availability chain: an available client
+  drops with prob ``p_drop``, a dropped one returns with ``p_return``
+  (stationary availability p_return / (p_drop + p_return)).
+* ``hetero_devices``  — per-client CPU/power classes drawn at init and
+  flowing into the Eq. 23a cost model (κ, f_max, p_max).
+* ``dynamic``         — all of the above; the kind every dynamic preset
+  normalises to, so a sweep over scenarios is data, not code.
+
+Purity contract: a transition may use only ``cfg`` floats, its PRNG key
+and the state arrays — no numpy, no python control flow on traced values,
+no host callbacks (the lowering test asserts it).  Custom transitions
+register with ``register_transition``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_MOBILE = "random_waypoint"
+_DROPOUT = "markov_dropout"
+_HETERO = "hetero_devices"
+_PARTS = (_MOBILE, _DROPOUT, _HETERO)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSpec:
+    """Host-side scenario initialisation config (NOT a jit static arg —
+    every number here becomes a ScenarioState array)."""
+    kind: str = "static"            # "static" | "+"-joined parts | "dynamic"
+    # random_waypoint mobility
+    speed_min_mps: float = 1.0
+    speed_max_mps: float = 15.0
+    round_duration_s: float = 10.0  # wall-clock per global round (motion step)
+    # markov_dropout availability
+    p_drop: float = 0.15            # P(available -> dropped) per round
+    p_return: float = 0.5           # P(dropped -> available) per round
+    # hetero_devices classes
+    n_device_classes: int = 4
+    kappa_spread: float = 1.0       # κ ∈ cfg.capacitance · [1, 1+spread]
+
+    @property
+    def parts(self) -> tuple:
+        """The BUILT-IN parts this kind activates (a custom registered
+        transition has none — its init is the identity parameterisation
+        and its own transition evolves whatever leaves it wants)."""
+        if self.kind == "static":
+            return ()
+        if self.kind == "dynamic":
+            return _PARTS
+        parts = tuple(self.kind.split("+"))
+        unknown = set(parts) - set(_PARTS)
+        if not unknown:
+            return parts
+        if self.kind in TRANSITIONS:          # registered custom transition
+            return ()
+        raise ValueError(f"unknown scenario part(s) {sorted(unknown)}; "
+                         f"choose from {_PARTS} or register_transition()")
+
+    @property
+    def is_dynamic(self) -> bool:
+        return self.kind != "static"
+
+    def engine_kind(self) -> str:
+        """The engine's trace-time switch.  Every built-in dynamic mixture
+        lowers to the SAME program ("dynamic"): which parts are active is
+        encoded in the state arrays, so scenario sweeps share one compile.
+        A custom registered kind selects its own transition (and its own
+        compile)."""
+        if self.kind == "static":
+            return "static"
+        return "dynamic" if (self.parts or self.kind == "dynamic") \
+            else self.kind
+
+    @property
+    def stationary_availability(self) -> float:
+        return self.p_return / max(self.p_drop + self.p_return, 1e-12)
+
+
+class ScenarioState(NamedTuple):
+    """Per-client world state carried across rounds (leaves (N, ...) /
+    (M, 2) / (N, M); a leading fleet axis appears under ``stack_fleet``)."""
+    pos: jnp.ndarray        # (N, 2) client positions [m]
+    waypoint: jnp.ndarray   # (N, 2) current waypoint target [m]
+    speed: jnp.ndarray      # (N,) metres moved per ROUND (speed·duration)
+    avail: jnp.ndarray      # (N,) float32 availability mask (1.0 / 0.0)
+    p_drop: jnp.ndarray     # (N,) P(up -> down); 0 disables dropout
+    p_return: jnp.ndarray   # (N,) P(down -> up); 1 disables dropout
+    f_max_hz: jnp.ndarray   # (N,) per-device CPU-frequency cap
+    p_max_w: jnp.ndarray    # (N,) per-device transmit-power cap
+    kappa: jnp.ndarray      # (N,) per-device effective capacitance κ
+    edges: jnp.ndarray      # (M, 2) edge-server positions (constant)
+    dist: jnp.ndarray       # (N, M) current client-edge distances
+
+
+def _distances(pos: jnp.ndarray, edges: jnp.ndarray) -> jnp.ndarray:
+    return jnp.linalg.norm(pos[:, None, :] - edges[None, :, :], axis=-1)
+
+
+def init_scenario(cfg, sspec: ScenarioSpec, rng: np.random.Generator,
+                  topo: Dict[str, np.ndarray]) -> ScenarioState:
+    """Materialise the spec into state arrays (host side, numpy RNG).
+
+    Inactive parts are initialised to their identity parameterisation
+    (speed 0, p_drop 0 / p_return 1, homogeneous devices), so the shared
+    ``advance_dynamic`` transition is a no-op along that axis.
+    """
+    n = cfg.n_clients
+    parts = sspec.parts
+    f32 = np.float32
+    pos = np.asarray(topo["clients"], f32)
+    edges = np.asarray(topo["edges"], f32)
+    dist = np.asarray(topo["dist"], f32)
+
+    if _MOBILE in parts:
+        speed = rng.uniform(sspec.speed_min_mps, sspec.speed_max_mps,
+                            n).astype(f32) * f32(sspec.round_duration_s)
+        waypoint = rng.uniform(0.0, cfg.area_side_m, (n, 2)).astype(f32)
+    else:
+        speed = np.zeros((n,), f32)
+        waypoint = pos.copy()
+
+    if _DROPOUT in parts:
+        p_drop = np.full((n,), sspec.p_drop, f32)
+        p_return = np.full((n,), sspec.p_return, f32)
+    else:
+        p_drop = np.zeros((n,), f32)
+        p_return = np.ones((n,), f32)
+
+    if _HETERO in parts:
+        cls = rng.integers(0, sspec.n_device_classes, n)
+        frac = (cls + 1.0) / sspec.n_device_classes          # (0, 1]
+        f_max = (cfg.f_min_hz
+                 + frac * (cfg.f_max_hz - cfg.f_min_hz)).astype(f32)
+        p_max = (cfg.p_min_w
+                 + frac * (cfg.p_max_w - cfg.p_min_w)).astype(f32)
+        # weaker silicon burns more J per cycle at a given f
+        kappa = (cfg.capacitance
+                 * (1.0 + sspec.kappa_spread * (1.0 - frac))).astype(f32)
+    else:
+        f_max = np.full((n,), cfg.f_max_hz, f32)
+        p_max = np.full((n,), cfg.p_max_w, f32)
+        kappa = np.full((n,), cfg.capacitance, f32)
+
+    return ScenarioState(
+        pos=jnp.asarray(pos), waypoint=jnp.asarray(waypoint),
+        speed=jnp.asarray(speed), avail=jnp.ones((n,), jnp.float32),
+        p_drop=jnp.asarray(p_drop), p_return=jnp.asarray(p_return),
+        f_max_hz=jnp.asarray(f_max), p_max_w=jnp.asarray(p_max),
+        kappa=jnp.asarray(kappa), edges=jnp.asarray(edges),
+        dist=jnp.asarray(dist))
+
+
+# ---------------------------------------------------------------------------
+# Pure transitions
+# ---------------------------------------------------------------------------
+
+def static_transition(cfg, key, s: ScenarioState) -> ScenarioState:
+    """Identity — the PR-1 frozen world."""
+    del cfg, key
+    return s
+
+
+def advance_dynamic(cfg, key, s: ScenarioState) -> ScenarioState:
+    """One round of world evolution: waypoint motion + availability chain.
+
+    Device classes are fixed per simulation (drawn at init); inactive axes
+    are identities by parameterisation (see ``init_scenario``), so this one
+    program serves every built-in scenario mixture.
+    """
+    k_wp, k_drop = jax.random.split(key)
+
+    # -- random-waypoint motion (speed is metres per round) ------------------
+    delta = s.waypoint - s.pos                                   # (N, 2)
+    d = jnp.linalg.norm(delta, axis=-1)                          # (N,)
+    arrived = d <= jnp.maximum(s.speed, 1e-6)
+    step = (s.speed / jnp.maximum(d, 1e-9))[:, None] * delta
+    pos = jnp.where(arrived[:, None], s.waypoint, s.pos + step)
+    fresh_wp = jax.random.uniform(k_wp, s.pos.shape, minval=0.0,
+                                  maxval=cfg.area_side_m)
+    waypoint = jnp.where(arrived[:, None], fresh_wp, s.waypoint)
+    dist = _distances(pos, s.edges)
+
+    # -- two-state Markov availability --------------------------------------
+    u = jax.random.uniform(k_drop, s.avail.shape)
+    up = s.avail > 0
+    avail = jnp.where(up, u >= s.p_drop, u < s.p_return)
+    return s._replace(pos=pos, waypoint=waypoint, dist=dist,
+                      avail=avail.astype(jnp.float32))
+
+
+Transition = Callable[..., ScenarioState]
+
+TRANSITIONS: Dict[str, Transition] = {"static": static_transition,
+                                      "dynamic": advance_dynamic}
+# the named parts (and every "+"-mixture of them, any order) run the same
+# data-parameterised program; registering them lets
+# EngineSpec(scenario="random_waypoint") work directly, at the price of one
+# compile per distinct kind string.
+import itertools as _it
+
+for _r in range(1, len(_PARTS) + 1):
+    for _combo in _it.permutations(_PARTS, _r):
+        TRANSITIONS["+".join(_combo)] = advance_dynamic
+
+
+def register_transition(kind: str, fn: Transition) -> None:
+    """Register a custom pure transition ``fn(cfg, key, state) -> state``.
+    It must obey the purity contract (jit/scan/vmap-safe, no host calls)."""
+    TRANSITIONS[kind] = fn
+
+
+def advance(cfg, kind: str, key, s: ScenarioState) -> ScenarioState:
+    if kind not in TRANSITIONS:
+        raise ValueError(f"unknown scenario transition {kind!r}; "
+                         f"registered: {sorted(TRANSITIONS)}")
+    return TRANSITIONS[kind](cfg, key, s)
+
+
+# ---------------------------------------------------------------------------
+# Presets (the sweep vocabulary)
+# ---------------------------------------------------------------------------
+
+PRESETS: Dict[str, ScenarioSpec] = {
+    "static": ScenarioSpec(),
+    "random_waypoint": ScenarioSpec(kind="random_waypoint"),
+    "markov_dropout": ScenarioSpec(kind="markov_dropout"),
+    "hetero_devices": ScenarioSpec(kind="hetero_devices"),
+    # flaky pedestrians: slow motion, sticky outages
+    "mobile_flaky": ScenarioSpec(kind="random_waypoint+markov_dropout",
+                                 speed_max_mps=3.0, p_drop=0.3, p_return=0.3),
+    # everything at once — vehicular speeds on a heterogeneous fleet
+    "full_dynamic": ScenarioSpec(kind="dynamic", speed_max_mps=25.0),
+}
+
+
+def preset(name_or_spec) -> ScenarioSpec:
+    """Resolve a preset name / kind string / ScenarioSpec to a spec."""
+    if isinstance(name_or_spec, ScenarioSpec):
+        return name_or_spec
+    if name_or_spec is None:
+        return ScenarioSpec()
+    if name_or_spec in PRESETS:
+        return PRESETS[name_or_spec]
+    return ScenarioSpec(kind=str(name_or_spec))   # validates via .parts

@@ -1,0 +1,4 @@
+from repro.sweeps.grid import (SweepCell, SweepGrid, expand_grid, run_sweep,
+                               summarize)
+
+__all__ = ["SweepCell", "SweepGrid", "expand_grid", "run_sweep", "summarize"]

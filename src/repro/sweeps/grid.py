@@ -1,0 +1,250 @@
+"""Declarative scenario × policy × allocator sweep runner (DESIGN.md §6.3).
+
+A ``SweepGrid`` names the axes of an experiment grid — scenarios (preset
+names or ``ScenarioSpec``s), association policies, allocators, schedulers,
+NOMA on/off, seeds — and ``run_sweep`` executes the full cross product with
+the MINIMUM number of XLA compiles:
+
+* axes that are trace-time code paths (policy / allocator / scheduler /
+  NOMA / scenario *kind*) partition the grid into static-spec groups;
+* everything else (scenario parameterisation, seeds) is DATA: every cell
+  of a group is stacked along the fleet axis (``stack_fleet``) and the
+  whole group runs as one vmapped ``run_fleet`` call — one compile, no
+  matter how many scenarios × seeds ride in it.
+
+Because every built-in dynamic scenario normalises to the single "dynamic"
+transition kind (scenarios are arrays, not code — DESIGN.md §6.1), a sweep
+over N scenarios × S seeds under one policy is exactly ONE compile (plus
+one for a static-scenario row if present).
+
+Per-cell metric trajectories are persisted as JSON under
+``results/sweep_<name>/`` — the machinery for the paper's Figs. 8-12
+protocol under moving, flaky, heterogeneous clients.
+
+    PYTHONPATH=src python -m repro.sweeps.grid --quick   # demo sweep
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Dict, List, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro import scenarios
+from repro.core import engine
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepCell:
+    """One point of the grid (hashable; carries the RESOLVED scenario spec
+    so custom parameterisations survive the trip through the runner)."""
+    scenario: str                  # display label (preset name / kind)
+    sspec: scenarios.ScenarioSpec
+    policy: str
+    allocator: str
+    scheduler: str
+    noma_enabled: bool
+    seed: int
+
+    @property
+    def cell_id(self) -> str:
+        noma = "noma" if self.noma_enabled else "oma"
+        return (f"{self.scenario}__{self.policy}__{self.allocator}"
+                f"__{self.scheduler}__{noma}__s{self.seed}")
+
+
+@dataclasses.dataclass
+class SweepGrid:
+    """The declarative grid: every field is an axis of the cross product.
+
+    ``scenarios`` entries may be preset names / kind strings, ScenarioSpec
+    instances, or ``(label, ScenarioSpec)`` pairs — use a pair to give a
+    custom parameterisation a distinct cell label.
+    """
+    name: str
+    scenarios: Sequence[Any] = ("static",)
+    policies: Sequence[str] = ("fcea",)
+    allocators: Sequence[str] = ("mid",)
+    schedulers: Sequence[str] = ("pdd",)
+    noma: Sequence[bool] = (True,)
+    seeds: Sequence[int] = (0,)
+    n_rounds: int = 10
+    iid: bool = True
+
+
+def _resolve_scenario(entry: Any) -> Tuple[str, scenarios.ScenarioSpec]:
+    """(label, spec) for a grid scenario entry, preserving its parameters."""
+    if isinstance(entry, tuple):
+        label, spec = entry
+        return str(label), scenarios.preset(spec)
+    if isinstance(entry, scenarios.ScenarioSpec):
+        return entry.kind, entry
+    return str(entry), scenarios.preset(entry)
+
+
+def expand_grid(grid: SweepGrid) -> List[SweepCell]:
+    cells = [SweepCell(label, sspec, po, al, sch, nm, sd)
+             for label, sspec in map(_resolve_scenario, grid.scenarios)
+             for po in grid.policies for al in grid.allocators
+             for sch in grid.schedulers for nm in grid.noma
+             for sd in grid.seeds]
+    ids = [c.cell_id for c in cells]
+    if len(set(ids)) != len(ids):
+        dupes = sorted({i for i in ids if ids.count(i) > 1})
+        raise ValueError(
+            f"ambiguous sweep cells {dupes}: two scenario entries share a "
+            f"label — use (label, ScenarioSpec) pairs to disambiguate")
+    return cells
+
+
+def _spec_for(cell: SweepCell) -> engine.EngineSpec:
+    return engine.EngineSpec(policy=cell.policy, allocator=cell.allocator,
+                             scheduler=cell.scheduler,
+                             noma_enabled=cell.noma_enabled,
+                             scenario=cell.sspec.engine_kind())
+
+
+def _group_cells(cells: Sequence[SweepCell]
+                 ) -> Dict[engine.EngineSpec, List[SweepCell]]:
+    groups: Dict[engine.EngineSpec, List[SweepCell]] = {}
+    for cell in cells:
+        groups.setdefault(_spec_for(cell), []).append(cell)
+    return groups
+
+
+def run_sweep(cfg, grid: SweepGrid, *, out_dir: str = "results",
+              write_json: bool = True, actor_params=None) -> Dict[str, Any]:
+    """Execute the grid; returns (and persists) a summary + per-cell rows.
+
+    One ``run_fleet`` call — hence one compile — per static-spec group;
+    inside a group all scenarios × seeds run vmapped in a single program.
+
+    ``actor_params`` (a trained DDPG actor pytree) is required when the
+    grid has ``allocator="ddpg"`` cells — without it the engine would
+    silently fall back to the midpoint allocator and the persisted JSON
+    would mislabel baseline results as DDPG.
+    """
+    cells = expand_grid(grid)
+    ddpg_cells = [c for c in cells if c.allocator == "ddpg"]
+    if ddpg_cells:
+        if actor_params is None:
+            raise ValueError(
+                "grid has allocator='ddpg' cells but no actor_params were "
+                "given; pass a trained actor (e.g. HFLSimulation.train_ddpg "
+                "then sim.agent.actor) or drop the ddpg axis")
+        if len({c.sspec.engine_kind() == "static" for c in ddpg_cells}) > 1:
+            raise ValueError(
+                "ddpg cells mix static (2N,) and dynamic (3N,) observation "
+                "shapes — one actor cannot serve both; split the grid")
+    groups = _group_cells(cells)
+    sweep_dir = os.path.join(out_dir, f"sweep_{grid.name}")
+    if write_json:
+        os.makedirs(sweep_dir, exist_ok=True)
+
+    per_cell: Dict[str, Dict[str, list]] = {}
+    timings: List[Dict[str, Any]] = []
+    # cells differing only in policy/allocator/scheduler/NOMA share the
+    # exact same (seed, scenario) world — init it once, not once per cell
+    init_cache: Dict[Tuple[int, scenarios.ScenarioSpec], tuple] = {}
+
+    def _init(c: SweepCell):
+        k = (c.seed, c.sspec)
+        if k not in init_cache:
+            init_cache[k] = engine.init_simulation(cfg, seed=c.seed,
+                                                   iid=grid.iid,
+                                                   scenario=c.sspec)[:2]
+        return init_cache[k]
+
+    for spec, members in groups.items():
+        pairs = [_init(c) for c in members]
+        states, bundles = engine.stack_fleet(pairs)
+        t0 = time.perf_counter()
+        _, ms = engine.run_fleet(cfg, spec, states, bundles, grid.n_rounds,
+                                 actor_params)
+        jax.block_until_ready(ms.cost)
+        dt = time.perf_counter() - t0
+        timings.append({"spec": dataclasses.asdict(spec),
+                        "n_cells": len(members), "wall_s": round(dt, 4)})
+        # one device->host transfer per metrics leaf for the WHOLE group
+        host = {k: np.asarray(v) for k, v in ms._asdict().items()}
+        for i, cell in enumerate(members):
+            rows = {k: v[i].tolist() for k, v in host.items()}
+            per_cell[cell.cell_id] = rows
+            if write_json:
+                payload = {"cell": dataclasses.asdict(cell),
+                           "spec": dataclasses.asdict(spec),
+                           "n_rounds": grid.n_rounds,
+                           "metrics": rows}
+                with open(os.path.join(sweep_dir,
+                                       f"{cell.cell_id}.json"), "w") as fh:
+                    json.dump(payload, fh, indent=1)
+
+    summary = {
+        "name": grid.name,
+        "n_cells": len(cells),
+        "n_compiles": len(groups),     # one vmapped run_fleet per group
+        "n_rounds": grid.n_rounds,
+        "axes": {"scenarios": [_resolve_scenario(s)[0]
+                               for s in grid.scenarios],
+                 "policies": list(grid.policies),
+                 "allocators": list(grid.allocators),
+                 "schedulers": list(grid.schedulers),
+                 "noma": list(grid.noma),
+                 "seeds": list(grid.seeds)},
+        "groups": timings,
+        "final": summarize(per_cell),
+    }
+    if write_json:
+        with open(os.path.join(sweep_dir, "summary.json"), "w") as fh:
+            json.dump(summary, fh, indent=1)
+    summary["cells"] = per_cell
+    return summary
+
+
+def summarize(per_cell: Dict[str, Dict[str, list]]) -> Dict[str, dict]:
+    """Final-round view per cell: the numbers the paper's figures plot."""
+    out = {}
+    for cid, rows in per_cell.items():
+        out[cid] = {"accuracy": rows["accuracy"][-1],
+                    "loss": rows["loss"][-1],
+                    "cost": rows["cost"][-1],
+                    "mean_cost": float(np.mean(rows["cost"])),
+                    "n_associated": rows["n_associated"][-1],
+                    "n_available": rows["n_available"][-1]}
+    return out
+
+
+def main(argv=None) -> None:
+    import argparse
+    import dataclasses as dc
+
+    from repro.configs.hfl_mnist import CONFIG
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="results")
+    args = ap.parse_args(argv)
+
+    cfg = dc.replace(CONFIG, n_clients=32, n_edges=4, min_samples=60,
+                     max_samples=120, hidden=32, input_dim=64)
+    grid = SweepGrid(
+        name="demo",
+        scenarios=("static", "random_waypoint", "markov_dropout",
+                   "hetero_devices", "full_dynamic"),
+        policies=("fcea", "gcea"),
+        seeds=(0,) if args.quick else (0, 1),
+        n_rounds=3 if args.quick else 10)
+    summary = run_sweep(cfg, grid, out_dir=args.out)
+    print(json.dumps({k: summary[k] for k in
+                      ("name", "n_cells", "n_compiles", "groups")}, indent=1))
+    for cid, row in summary["final"].items():
+        print(f"{cid}: acc={row['accuracy']:.3f} "
+              f"cost={row['mean_cost']:.3f} avail={row['n_available']}")
+
+
+if __name__ == "__main__":
+    main()

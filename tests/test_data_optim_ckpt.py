@@ -38,6 +38,47 @@ def test_partitioner_noniid_skew(rng):
     assert np.mean(fracs) > 0.35
 
 
+def test_partitioner_noniid_exact_quantities(rng):
+    """Regression: the Dirichlet branch's per-class floor used to under-fill
+    the drawn D_n; every client must now get EXACTLY its drawn quantity."""
+    expected = np.maximum(
+        np.random.default_rng(7).integers(30, 81, 12), 1)
+    fd = federated.make_federated(np.random.default_rng(7), n_clients=12,
+                                  dim=8, iid=False, min_samples=30,
+                                  max_samples=80, dirichlet_alpha=0.3,
+                                  test_samples=20)
+    np.testing.assert_array_equal(fd.counts, expected)
+    for c in range(12):
+        n = fd.counts[c]
+        assert n >= 1
+        assert np.abs(fd.x[c, :n]).sum() > 0
+        assert (fd.x[c, n:] == 0).all()
+
+
+def test_partitioner_noniid_empty_class_pool(rng):
+    """Regression: a class absent from the tiny shared pool used to crash
+    the Dirichlet loop with a modulo-by-zero; the deficit must instead be
+    topped up from non-empty classes."""
+    for seed in range(5):
+        r = np.random.default_rng(seed)
+        # ~9 pool samples over 10 classes guarantees empty classes
+        fd = federated.make_federated(r, n_clients=3, dim=4, iid=False,
+                                      min_samples=2, max_samples=4,
+                                      dirichlet_alpha=0.5, test_samples=5)
+        assert (fd.counts >= 1).all()
+        for c in range(3):
+            y = fd.y[c, :fd.counts[c]]
+            assert len(y) == fd.counts[c]
+
+
+def test_partitioner_min_one_sample(rng):
+    """min_samples=0 must still leave every client with ≥ 1 sample."""
+    fd = federated.make_federated(rng, n_clients=6, dim=4, iid=True,
+                                  min_samples=0, max_samples=10,
+                                  test_samples=10)
+    assert (fd.counts >= 1).all()
+
+
 def test_classification_learnable(rng):
     x, y = synthetic.make_classification(rng, n_samples=500, dim=32,
                                          noise=0.5)

@@ -1,0 +1,141 @@
+"""Sweep-grid runner tests (DESIGN.md §6.3).
+
+The acceptance shape: a run_fleet sweep over ≥3 scenarios × 2 association
+policies completes in a single vmapped compile PER static-spec group (all
+dynamic scenarios share one group per policy) and writes per-cell JSON
+trajectories under the results directory.
+"""
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro import scenarios, sweeps
+from repro.configs.hfl_mnist import CONFIG
+from repro.core import engine
+
+SMALL = dataclasses.replace(CONFIG, n_clients=16, n_edges=2,
+                            clients_per_edge=3, min_samples=60,
+                            max_samples=120, hidden=32, input_dim=64)
+
+
+def _grid(**over):
+    base = dict(name="t",
+                scenarios=("random_waypoint", "markov_dropout",
+                           "hetero_devices"),
+                policies=("fcea", "gcea"), seeds=(0,), n_rounds=2)
+    base.update(over)
+    return sweeps.SweepGrid(**base)
+
+
+def test_expand_grid_cross_product():
+    grid = _grid(seeds=(0, 1))
+    cells = sweeps.expand_grid(grid)
+    assert len(cells) == 3 * 2 * 2
+    assert len({c.cell_id for c in cells}) == len(cells)
+
+
+def test_dynamic_scenarios_share_one_compile_per_policy(tmp_path):
+    """3 dynamic scenarios × 2 policies -> exactly 2 vmapped compiles."""
+    grid = _grid()
+    before = engine.run_fleet._cache_size()
+    summary = sweeps.run_sweep(SMALL, grid, out_dir=str(tmp_path))
+    after = engine.run_fleet._cache_size()
+    assert summary["n_cells"] == 6
+    assert summary["n_compiles"] == 2              # one per policy
+    # the jit cache grew by at most one entry per policy group — the three
+    # scenarios of a group really do share a single vmapped program
+    assert after - before <= 2
+    for g in summary["groups"]:
+        assert g["n_cells"] == 3                   # scenarios ride the vmap
+        assert g["spec"]["scenario"] == "dynamic"
+
+
+def test_sweep_writes_per_cell_json(tmp_path):
+    grid = _grid(scenarios=("static", "full_dynamic"), policies=("gcea",),
+                 schedulers=("fastest",))
+    summary = sweeps.run_sweep(SMALL, grid, out_dir=str(tmp_path))
+    sweep_dir = os.path.join(str(tmp_path), "sweep_t")
+    files = sorted(os.listdir(sweep_dir))
+    assert "summary.json" in files
+    cell_files = [f for f in files if f != "summary.json"]
+    assert len(cell_files) == summary["n_cells"] == 2
+    for f in cell_files:
+        with open(os.path.join(sweep_dir, f)) as fh:
+            payload = json.load(fh)
+        assert payload["n_rounds"] == 2
+        for field in ("accuracy", "loss", "cost", "n_available", "z"):
+            assert len(payload["metrics"][field]) == 2
+        assert np.isfinite(payload["metrics"]["cost"]).all()
+
+
+def test_sweep_cell_matches_direct_run(tmp_path):
+    """A sweep cell's trajectory equals a standalone run_scanned with the
+    same scenario + seed (the grid machinery adds nothing but batching)."""
+    grid = _grid(scenarios=("mobile_flaky",), policies=("fcea",),
+                 n_rounds=3)
+    summary = sweeps.run_sweep(SMALL, grid, out_dir=str(tmp_path),
+                               write_json=False)
+    (cid, rows), = summary["cells"].items()
+    spec = engine.EngineSpec(policy="fcea", scenario="dynamic")
+    state, bundle, _ = engine.init_simulation(SMALL, seed=0,
+                                              scenario="mobile_flaky")
+    _, ms = engine.run_scanned(SMALL, spec, state, bundle, 3)
+    np.testing.assert_allclose(rows["cost"], np.asarray(ms.cost), rtol=1e-5)
+    np.testing.assert_array_equal(rows["n_available"],
+                                  np.asarray(ms.n_available))
+
+
+def test_custom_scenario_spec_parameters_survive(tmp_path):
+    """Regression: a ScenarioSpec passed into the grid must run with ITS
+    parameters, not a preset rebuilt from its kind label."""
+    blackout = scenarios.ScenarioSpec(kind="markov_dropout", p_drop=1.0,
+                                      p_return=0.0)
+    grid = _grid(scenarios=(("blackout", blackout),), policies=("gcea",),
+                 schedulers=("fastest",), n_rounds=2)
+    summary = sweeps.run_sweep(SMALL, grid, out_dir=str(tmp_path),
+                               write_json=False)
+    (cid, rows), = summary["cells"].items()
+    assert cid.startswith("blackout__")
+    # p_drop=1, p_return=0: everyone is gone from round 1 onward — the
+    # default markov_dropout preset would keep most clients available
+    assert rows["n_available"] == [0, 0]
+
+
+def test_ddpg_cells_require_actor_params():
+    """Regression: without a trained actor the engine silently runs the
+    midpoint allocator — the sweep must refuse to mislabel those results."""
+    grid = _grid(scenarios=("static",), allocators=("mid", "ddpg"))
+    with pytest.raises(ValueError, match="actor_params"):
+        sweeps.run_sweep(SMALL, grid, write_json=False)
+
+
+def test_ddpg_cells_reject_mixed_observation_shapes():
+    """One actor cannot serve both static (2N,) and dynamic (3N,) obs."""
+    grid = _grid(scenarios=("static", "full_dynamic"), allocators=("ddpg",))
+    with pytest.raises(ValueError, match="observation"):
+        sweeps.run_sweep(SMALL, grid, write_json=False,
+                         actor_params={"w": np.zeros((1,))})
+
+
+def test_duplicate_scenario_labels_rejected():
+    spec_a = scenarios.ScenarioSpec(kind="markov_dropout", p_drop=0.1)
+    spec_b = scenarios.ScenarioSpec(kind="markov_dropout", p_drop=0.9)
+    with pytest.raises(ValueError, match="ambiguous"):
+        sweeps.expand_grid(_grid(scenarios=(spec_a, spec_b)))
+
+
+def test_same_seed_same_data_across_scenarios():
+    """Scenario draws happen after topology+data: the federation is
+    identical under every scenario, so sweep columns are comparable."""
+    _, b_static, _ = engine.init_simulation(SMALL, seed=3)
+    _, b_dyn, _ = engine.init_simulation(SMALL, seed=3,
+                                         scenario="full_dynamic")
+    np.testing.assert_array_equal(np.asarray(b_static.counts),
+                                  np.asarray(b_dyn.counts))
+    np.testing.assert_array_equal(np.asarray(b_static.x),
+                                  np.asarray(b_dyn.x))
+    np.testing.assert_array_equal(np.asarray(b_static.dist),
+                                  np.asarray(b_dyn.dist))
