@@ -1,0 +1,117 @@
+"""Scanned vs eager DDPG trainer (DESIGN.md §7).
+
+The tentpole question of PR 3: what does folding the whole of paper
+Algorithm 2 (env rollout + replay store + actor/critic update) into ONE
+``lax.scan``-of-scans program buy over the legacy per-step Python loop?
+
+* trains the allocator twice — ``ddpg.train_allocator`` (one compiled XLA
+  program) and ``ddpg.train_allocator_eager`` (the per-step oracle) — on
+  the SAME (cfg, spec, state, bundle, key), under the ``full_dynamic``
+  scenario so the actor sees the (3N,) scenario-sliced observation;
+* asserts the two histories agree (the parity the tests pin, re-checked
+  here at benchmark scale);
+* writes BENCH_ddpg.json at the repo root so the perf trajectory is
+  tracked across PRs.
+
+  PYTHONPATH=src python -m benchmarks.bench_ddpg [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.hfl_mnist import CONFIG
+from repro.core import ddpg, engine
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_ddpg.json")
+
+
+def _setup(n_clients: int, n_edges: int):
+    cfg = dataclasses.replace(CONFIG, n_clients=n_clients, n_edges=n_edges,
+                              clients_per_edge=4, min_samples=60,
+                              max_samples=120, hidden=16, input_dim=32)
+    spec = engine.EngineSpec(policy="gcea", scheduler="fastest",
+                             scenario="dynamic")
+    state, bundle, _ = engine.init_simulation(cfg, seed=0,
+                                              scenario="full_dynamic")
+    return cfg, spec, state, bundle
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny shapes/episodes (CI smoke)")
+    args = ap.parse_args(argv)
+
+    n, m = (16, 2) if args.quick else (64, 4)
+    episodes = 2 if args.quick else 10
+    steps = 8 if args.quick else 40
+    hidden = 16 if args.quick else 64
+    warmup = 4 if args.quick else 64
+
+    cfg, spec, state, bundle = _setup(n, m)
+    dcfg = ddpg.allocator_config(cfg, spec, hidden=hidden, buffer_size=1024)
+    key = jax.random.key(0)
+    kw = dict(episodes=episodes, steps_per_episode=steps, warmup=warmup)
+
+    # scanned: first call compiles, second measures steady-state
+    t0 = time.perf_counter()
+    agent_s, hist_s = ddpg.train_allocator(cfg, spec, state, bundle, dcfg,
+                                           key, **kw)
+    jax.block_until_ready(agent_s.actor)
+    compile_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    agent_s, hist_s = ddpg.train_allocator(cfg, spec, state, bundle, dcfg,
+                                           key, **kw)
+    jax.block_until_ready(agent_s.actor)
+    scanned_s = time.perf_counter() - t0
+
+    # warm the eager path's jitted pieces (train_step etc.) so both
+    # timers measure steady-state work, not one-off compiles
+    ddpg.train_allocator_eager(cfg, spec, state, bundle, dcfg, key,
+                               episodes=1, steps_per_episode=2, warmup=1)
+    t0 = time.perf_counter()
+    agent_e, hist_e = ddpg.train_allocator_eager(cfg, spec, state, bundle,
+                                                 dcfg, key, **kw)
+    jax.block_until_ready(agent_e.actor)
+    eager_s = time.perf_counter() - t0
+
+    # the speedup only counts if both trainers walked the same trajectory
+    np.testing.assert_allclose(np.asarray(hist_s["episode_reward"]),
+                               np.asarray(hist_e["episode_reward"]),
+                               rtol=1e-4, atol=1e-5)
+
+    total_steps = episodes * steps
+    record = {
+        "size": [n, m],
+        "episodes": episodes,
+        "steps_per_episode": steps,
+        "state_dim": dcfg.state_dim,
+        "eager_s": round(eager_s, 4),
+        "scanned_s": round(scanned_s, 4),
+        "scanned_compile_s": round(compile_s, 4),
+        "speedup": round(eager_s / max(scanned_s, 1e-9), 2),
+        "scanned_steps_per_s": round(total_steps / max(scanned_s, 1e-9), 1),
+        "eager_steps_per_s": round(total_steps / max(eager_s, 1e-9), 1),
+        "parity_max_abs_diff": float(np.max(np.abs(
+            np.asarray(hist_s["episode_reward"])
+            - np.asarray(hist_e["episode_reward"])))),
+        "last_ep_reward": round(float(
+            np.asarray(hist_s["episode_reward"])[-1]), 4),
+    }
+    emit(f"ddpg_trainer_n{n}_m{m}", 1e6 * scanned_s / total_steps, record)
+
+    with open(OUT, "w") as fh:
+        json.dump(record, fh, indent=2)
+    print(f"wrote {os.path.normpath(OUT)}")
+
+
+if __name__ == "__main__":
+    main()

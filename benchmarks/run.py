@@ -18,9 +18,9 @@ def main(argv=None) -> int:
     ap.add_argument("--only", default=None)
     args = ap.parse_args(argv)
 
-    from benchmarks import (bench_kernels, bench_roofline, bench_rounds,
-                            bench_sweeps, fig_avg_ms, fig_cost_vs_dn,
-                            fig_cost_vs_nm, fig_ddpg_cost,
+    from benchmarks import (bench_ddpg, bench_kernels, bench_roofline,
+                            bench_rounds, bench_sweeps, fig_avg_ms,
+                            fig_cost_vs_dn, fig_cost_vs_nm, fig_ddpg_cost,
                             fig_hfl_convergence)
     rounds = 4 if args.quick else 16
     episodes = 6 if args.quick else 15
@@ -29,6 +29,8 @@ def main(argv=None) -> int:
          lambda: bench_rounds.main(["--quick"] if args.quick else [])),
         ("bench_sweeps",
          lambda: bench_sweeps.main(["--quick"] if args.quick else [])),
+        ("bench_ddpg",
+         lambda: bench_ddpg.main(["--quick"] if args.quick else [])),
         ("fig_hfl_convergence", lambda: fig_hfl_convergence.main(rounds)),
         ("fig_avg_ms", lambda: fig_avg_ms.main(rounds)),
         ("fig_ddpg_cost", lambda: fig_ddpg_cost.main(episodes)),

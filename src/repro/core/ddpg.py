@@ -11,7 +11,7 @@ inside ``lax.scan`` because the NOMA/cost environment is pure JAX too.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, NamedTuple, Tuple
+from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -139,7 +139,13 @@ def _adam(params, grads, opt, lr, step, b1=0.9, b2=0.999, eps=1e-8):
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def train_step(key, ddpg: DDPGState, cfg: DDPGConfig) -> Tuple[DDPGState, Dict]:
-    """One mini-batch update of critic (Eq. 38) + actor (Eq. 39) + targets (Eq. 40)."""
+    """One mini-batch update of critic (Eq. 38) + actor (Eq. 39) + targets (Eq. 40).
+
+    Calling this before any ``store`` is a masked no-op: an empty replay
+    buffer holds only the all-zero init transitions, and training on those
+    would corrupt the networks before the first real experience arrives.
+    """
+    empty = (ddpg.buffer_idx == 0) & ~ddpg.buffer_full
     size = jnp.where(ddpg.buffer_full, cfg.buffer_size, ddpg.buffer_idx)
     size = jnp.maximum(size, 1)
     idx = jax.random.randint(key, (cfg.batch_size,), 0, size)
@@ -176,4 +182,198 @@ def train_step(key, ddpg: DDPGState, cfg: DDPGConfig) -> Tuple[DDPGState, Dict]:
         actor_opt=actor_opt, critic_opt=critic_opt,
         noise_sigma=ddpg.noise_sigma * cfg.noise_decay,
         step=ddpg.step + 1)
-    return new, {"critic_loss": cl, "actor_loss": al}
+    new = jax.tree.map(lambda old, upd: jnp.where(empty, old, upd),
+                       ddpg, new)
+    zero = jnp.zeros_like(cl)
+    return new, {"critic_loss": jnp.where(empty, zero, cl),
+                 "actor_loss": jnp.where(empty, zero, al)}
+
+
+# ---------------------------------------------------------------------------
+# The pure scanned trainer (paper Algorithm 2 as ONE XLA program)
+# ---------------------------------------------------------------------------
+
+def allocator_config(cfg, spec, *, hidden: int = 128,
+                     buffer_size: int = 4096,
+                     batch_size: int = 64) -> DDPGConfig:
+    """The DDPGConfig matching an engine (cfg, spec) pair: dynamic
+    scenarios add the availability slice to the observation, so the state
+    is (3N,) instead of (2N,) (DESIGN.md §6/§7)."""
+    n = cfg.n_clients
+    state_dim = (2 + (spec.scenario != "static")) * n
+    return DDPGConfig(state_dim=state_dim, action_dim=2 * n, hidden=hidden,
+                      buffer_size=buffer_size, batch_size=batch_size)
+
+
+def rollout_step(cfg, params, dcfg: DDPGConfig, carry, *,
+                 noma_enabled: bool = True, warmup: int = 64):
+    """Algorithm 2 lines 8-14 as ONE scan step: act (with exploration
+    noise), step the pure env, store the transition, then a mini-batch
+    update masked out during the replay warmup.
+
+    ``carry`` = (agent, env_state, obs, key, total_steps).  The masked
+    update consumes its PRNG key either way, so the key stream — and hence
+    the trajectory — is identical to an eager loop that *skips* the call.
+    """
+    from repro.core import env as env_mod
+    agent, est, obs, key, t = carry
+    key, ka, kt = jax.random.split(key, 3)
+    act = select_action(ka, agent, obs)
+    est, obs2, reward, _ = env_mod.env_step(cfg, params, est, act,
+                                            noma_enabled=noma_enabled)
+    agent = store(agent, dcfg, obs, act, reward, obs2)
+    t = t + 1
+    trained, losses = train_step(kt, agent, dcfg)
+    do_train = t >= warmup
+    agent = jax.tree.map(lambda upd, old: jnp.where(do_train, upd, old),
+                         trained, agent)
+    losses = {k: jnp.where(do_train, v, jnp.zeros_like(v))
+              for k, v in losses.items()}
+    return (agent, est, obs2, key, t), (reward, losses)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "dcfg", "episodes",
+                                             "steps_per_episode", "warmup",
+                                             "noma_enabled"))
+def _train_scanned(cfg, params, dcfg: DDPGConfig, key, *, episodes: int,
+                   steps_per_episode: int, warmup: int,
+                   noma_enabled: bool):
+    """episodes × steps as scan-of-scans: zero per-step host dispatch."""
+    from repro.core import env as env_mod
+    key, k_agent = jax.random.split(key)
+    agent0 = init_ddpg(k_agent, dcfg)
+
+    def episode(carry, _):
+        agent, key, t = carry
+        key, k_reset = jax.random.split(key)
+        est, obs = env_mod.env_reset(cfg, params, k_reset)
+
+        def step(c, _):
+            return rollout_step(cfg, params, dcfg, c,
+                                noma_enabled=noma_enabled, warmup=warmup)
+
+        (agent, _, _, key, t), (rewards, losses) = jax.lax.scan(
+            step, (agent, est, obs, key, t), None,
+            length=steps_per_episode)
+        ep = {"episode_reward": jnp.mean(rewards),
+              "critic_loss": jnp.mean(losses["critic_loss"]),
+              "actor_loss": jnp.mean(losses["actor_loss"])}
+        return (agent, key, t), ep
+
+    t0 = jnp.zeros((), jnp.int32)
+    (agent, key, _), history = jax.lax.scan(
+        episode, (agent0, key, t0), None, length=episodes)
+    return agent, history
+
+
+def _episode_params(cfg, spec, state, bundle):
+    """The training MDP for the CURRENT round state:
+    ``engine.associate_snapshot`` (the one definition of the one-off
+    association) over the scenario's cost surface.  Lazy engine import —
+    the engine itself lazily imports this module for its ddpg allocator
+    path."""
+    from repro.core import engine, env as env_mod
+    dynamic = spec.scenario != "static"
+    scen = state.scenario
+    dist = scen.dist if dynamic else bundle.dist
+    assoc = engine.associate_snapshot(cfg, spec, state,
+                                      bundle).astype(jnp.float32)
+    return env_mod.make_env_params(
+        cfg, assoc, jnp.ones((cfg.n_edges,)), dist, bundle.counts,
+        fading_rho=spec.fading_rho,
+        avail=scen.avail if dynamic else None,
+        kappa=scen.kappa if dynamic else None,
+        p_max_w=scen.p_max_w if dynamic else None,
+        f_max_hz=scen.f_max_hz if dynamic else None,
+        p_drop=scen.p_drop if dynamic else None,
+        p_return=scen.p_return if dynamic else None)
+
+
+def train_allocator(cfg, spec, state, bundle, dcfg: Optional[DDPGConfig],
+                    key, *, episodes: int = 20, steps_per_episode: int = 50,
+                    warmup: int = 64, hidden: int = 128
+                    ) -> Tuple[DDPGState, Dict[str, jnp.ndarray]]:
+    """Train the DDPG resource allocator for an engine simulation, fully
+    scanned: one episode (env rollout + ``store`` + ``train_step``) is a
+    single ``lax.scan``, and episodes scan on top — the whole of paper
+    Algorithm 2 is ONE compiled XLA program.
+
+    ``state``/``bundle`` are the engine's ``RoundState``/``RoundBundle``;
+    the observation and the billed cost follow the (cfg, spec) scenario
+    contract, so ``spec.scenario != "static"`` trains on the (3N,)
+    scenario-sliced observation.  Returns the trained ``DDPGState`` and a
+    history dict of per-episode (episodes,) arrays.
+    """
+    if dcfg is None:
+        dcfg = allocator_config(cfg, spec, hidden=hidden)
+    params = _episode_params(cfg, spec, state, bundle)
+    return _train_scanned(cfg, params, dcfg, key, episodes=episodes,
+                          steps_per_episode=steps_per_episode,
+                          warmup=warmup, noma_enabled=spec.noma_enabled)
+
+
+def train_allocator_fleet(cfg, spec, states, bundles,
+                          dcfg: Optional[DDPGConfig], keys, *,
+                          episodes: int = 20, steps_per_episode: int = 50,
+                          warmup: int = 64, hidden: int = 128
+                          ) -> Tuple[DDPGState, Dict[str, jnp.ndarray]]:
+    """``train_allocator`` vmapped over a fleet of stacked cells (states /
+    bundles / keys with a leading fleet axis, as from
+    ``engine.stack_fleet``): every cell trains its own actor on its own
+    world, all inside ONE XLA program — the training-side twin of
+    ``engine.run_fleet_actors``.  Returned leaves carry the fleet axis.
+    """
+    if dcfg is None:
+        dcfg = allocator_config(cfg, spec, hidden=hidden)
+
+    def one(state, bundle, key):
+        params = _episode_params(cfg, spec, state, bundle)
+        return _train_scanned(cfg, params, dcfg, key, episodes=episodes,
+                              steps_per_episode=steps_per_episode,
+                              warmup=warmup,
+                              noma_enabled=spec.noma_enabled)
+
+    return jax.vmap(one)(states, bundles, keys)
+
+
+def train_allocator_eager(cfg, spec, state, bundle,
+                          dcfg: Optional[DDPGConfig], key, *,
+                          episodes: int = 20, steps_per_episode: int = 50,
+                          warmup: int = 64, hidden: int = 128
+                          ) -> Tuple[DDPGState, Dict[str, jnp.ndarray]]:
+    """The eager oracle for ``train_allocator``: the same PRNG layout and
+    the same pure pieces, dispatched step by step from Python.  Exists for
+    the parity tests and the scanned-vs-eager benchmark — use
+    ``train_allocator`` for real work."""
+    from repro.core import env as env_mod
+    if dcfg is None:
+        dcfg = allocator_config(cfg, spec, hidden=hidden)
+    params = _episode_params(cfg, spec, state, bundle)
+    key, k_agent = jax.random.split(key)
+    agent = init_ddpg(k_agent, dcfg)
+    history = {"episode_reward": [], "critic_loss": [], "actor_loss": []}
+    total = 0
+    for _ in range(episodes):
+        key, k_reset = jax.random.split(key)
+        est, obs = env_mod.env_reset(cfg, params, k_reset)
+        rewards, closs, aloss = [], [], []
+        for _ in range(steps_per_episode):
+            key, ka, kt = jax.random.split(key, 3)
+            act = select_action(ka, agent, obs)
+            est, obs2, reward, _ = env_mod.env_step(
+                cfg, params, est, act, noma_enabled=spec.noma_enabled)
+            agent = store(agent, dcfg, obs, act, reward, obs2)
+            obs = obs2
+            total += 1
+            rewards.append(reward)
+            if total >= warmup:
+                agent, losses = train_step(kt, agent, dcfg)
+                closs.append(losses["critic_loss"])
+                aloss.append(losses["actor_loss"])
+            else:
+                closs.append(jnp.zeros(()))
+                aloss.append(jnp.zeros(()))
+        history["episode_reward"].append(jnp.mean(jnp.stack(rewards)))
+        history["critic_loss"].append(jnp.mean(jnp.stack(closs)))
+        history["actor_loss"].append(jnp.mean(jnp.stack(aloss)))
+    return agent, {k: jnp.stack(v) for k, v in history.items()}

@@ -232,10 +232,30 @@ def _associate(cfg, spec: EngineSpec, key, gains, dist, counts, stale,
         coverage_radius_m=coverage_radius(cfg), key=key, avail=avail)
 
 
+def _grid_allocate(cfg, spec: EngineSpec, assoc, gains, counts, dist,
+                   scen: Optional[ScenarioState], fixed_axis: int
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """The paper's FPA/FCA benchmarks (§V-D): one action axis pinned at
+    its maximum, the other grid-optimised against the SAME Eq. 23a bill
+    the engine charges — literally ``env.grid_best_action``, the one
+    implementation the env baselines use, over the allocator-stage
+    surface (z = 1; ``assoc`` is already availability-masked upstream)."""
+    params = env.make_env_params(
+        cfg, assoc, jnp.ones((cfg.n_edges,)), dist, counts,
+        kappa=scen.kappa if scen is not None else None,
+        p_max_w=scen.p_max_w if scen is not None else None,
+        f_max_hz=scen.f_max_hz if scen is not None else None)
+    a = env.grid_best_action(cfg, params, gains, fixed_axis=fixed_axis,
+                             fixed_frac=1.0,
+                             noma_enabled=spec.noma_enabled)
+    return env.env_decode_action(cfg, params, a)
+
+
 def _allocate(cfg, spec: EngineSpec, key, assoc, gains, counts,
-              actor_params, scen: Optional[ScenarioState] = None
+              actor_params, scen: Optional[ScenarioState], dist
               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """(p_w (N,), f_hz (N,)) per the configured allocator (§IV-C)."""
+    """(p_w (N,), f_hz (N,)) per the configured allocator (§IV-C).
+    ``dist`` (N, M) feeds the fpa/fca grid search's EnvParams."""
     n = cfg.n_clients
     mid_p = jnp.full((n,), 0.5 * (cfg.p_min_w + cfg.p_max_w))
     mid_f = jnp.full((n,), 0.5 * (cfg.f_min_hz + cfg.f_max_hz))
@@ -251,20 +271,50 @@ def _allocate(cfg, spec: EngineSpec, key, assoc, gains, counts,
         p = cfg.p_min_w + a[0] * (cfg.p_max_w - cfg.p_min_w)
         f = cfg.f_min_hz + a[1] * (cfg.f_max_hz - cfg.f_min_hz)
         return p, f
-    if spec.allocator == "fpa":     # fixed power, max freq
-        return mid_p, jnp.full((n,), cfg.f_max_hz)
-    # "fca" and "mid" (and ddpg before an agent exists): midpoint defaults
+    if spec.allocator == "fpa":     # power pinned at p_max, f optimised
+        return _grid_allocate(cfg, spec, assoc, gains, counts, dist, scen,
+                              fixed_axis=0)
+    if spec.allocator == "fca":     # frequency pinned at f_max, p optimised
+        return _grid_allocate(cfg, spec, assoc, gains, counts, dist, scen,
+                              fixed_axis=1)
+    # "mid" (and ddpg before an agent exists): midpoint defaults
     return mid_p, mid_f
+
+
+def associate_snapshot(cfg, spec: EngineSpec, state: RoundState,
+                       bundle: RoundBundle) -> jnp.ndarray:
+    """One-off (N, M) association on the CURRENT state, without advancing
+    it: the same key slot and inputs ``round_step`` consumes, taken
+    pre-transition (a dynamic ``round_step`` advances the scenario and
+    fades the channel first, so its deployed association is one world
+    step ahead of this snapshot).  THE single definition of the
+    snapshot — the DDPG trainer's episode MDP and the wrapper's
+    ``HFLSimulation._associate`` both read it, so the two consumers
+    cannot drift from each other."""
+    dynamic = spec.scenario != "static"
+    scen = state.scenario
+    return _associate(cfg, spec, round_keys(spec, state.key)[3],
+                      state.gains, scen.dist if dynamic else bundle.dist,
+                      bundle.counts, state.staleness,
+                      scen.avail if dynamic else None)
 
 
 def _schedule(cfg, spec: EngineSpec, rc_all: cost.RoundCost
               ) -> jnp.ndarray:
-    """Semi-synchronous edge-selection mask z (M,) from ONE cost eval."""
+    """Semi-synchronous edge-selection mask z (M,) from ONE cost eval.
+
+    The PDD problem must optimise EXACTLY the Eq. 23a surface the engine
+    bills: its per-edge time is ``t_cloud + U_m`` with
+    ``U_m = τ₂ · max_{n∈N_m} t_n`` — the τ₂-scaled edge-iteration time of
+    Eq. 13, not one bare client iteration.  With that U, the PDD objective
+    at its own z equals ``apply_schedule(cfg, rc_all, z).cost`` identically
+    (the regression test in tests/test_pdd.py pins it).
+    """
     quota = max(1, int(round(cfg.semi_sync_fraction * cfg.n_edges)))
     if spec.scheduler == "pdd":
         t_cloud = jnp.full((cfg.n_edges,),
                            cfg.edge_model_size_bits / cfg.edge_rate_bps)
-        U = jnp.max(rc_all.client_time_s)
+        U = rc_all.per_edge_time_s - t_cloud
         res = pdd.pdd_schedule(rc_all.per_edge_energy_j, t_cloud, U,
                                lam_t=cfg.lambda_t, lam_e=cfg.lambda_e,
                                quota=quota)
@@ -366,7 +416,7 @@ def round_step(cfg, spec: EngineSpec, state: RoundState,
         assoc = assoc * avail[:, None]
     # 3. resource allocation, clamped to the device class caps
     p, f = _allocate(cfg, spec, k_alloc, assoc, gains, bundle.counts,
-                     actor_params, scen if dynamic else None)
+                     actor_params, scen if dynamic else None, dist)
     if dynamic:
         p = jnp.minimum(p, scen.p_max_w)
         f = jnp.minimum(f, scen.f_max_hz)
@@ -437,6 +487,20 @@ def run_fleet(cfg, spec: EngineSpec, states: RoundState,
     return jax.vmap(
         lambda s, b: _scan_rounds(cfg, spec, s, b, n_rounds, actor_params)
     )(states, bundles)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 4))
+def run_fleet_actors(cfg, spec: EngineSpec, states: RoundState,
+                     bundles: RoundBundle, n_rounds: int,
+                     actor_params: Params
+                     ) -> Tuple[RoundState, RoundMetrics]:
+    """``run_fleet`` with a PER-SIMULATION actor: ``actor_params`` leaves
+    carry a leading fleet axis (one trained actor per stacked cell), so a
+    sweep can bill every ddpg cell with the actor trained on ITS OWN
+    world while still running the whole group as one vmapped program."""
+    return jax.vmap(
+        lambda s, b, a: _scan_rounds(cfg, spec, s, b, n_rounds, a)
+    )(states, bundles, actor_params)
 
 
 def metrics_row(metrics: RoundMetrics, i: Optional[int] = None):

@@ -24,6 +24,28 @@ class EnvState(NamedTuple):
     avail: jnp.ndarray | None = None   # (N,) evolving availability (§6)
 
 
+class EnvParams(NamedTuple):
+    """Everything the MDP needs besides the evolving ``EnvState`` — traced
+    arrays only (``None`` leaves switch code paths at trace time), so one
+    compiled episode serves every parameterisation of the same shape.
+
+    The DDPG trainer closes over an ``EnvParams`` and scans
+    ``env_step``; the ``NomaHflEnv`` class below is a thin wrapper holding
+    one of these (DESIGN.md §7).
+    """
+    assoc: jnp.ndarray                 # (N, M) one-hot association
+    z: jnp.ndarray                     # (M,) edge-selection mask
+    dist: jnp.ndarray                  # (N, M) client-edge distances
+    n_samples: jnp.ndarray             # (N,) D_n
+    fading_rho: jnp.ndarray            # () Gauss-Markov fading coefficient
+    avail0: jnp.ndarray | None         # (N,) initial availability (or None)
+    kappa: jnp.ndarray | None          # (N,) per-device κ (§6)
+    p_max_w: jnp.ndarray | None        # (N,) per-device power cap
+    f_max_hz: jnp.ndarray | None       # (N,) per-device frequency cap
+    p_drop: jnp.ndarray | None         # (N,) P(up -> down) between slots
+    p_return: jnp.ndarray | None       # (N,) P(down -> up) between slots
+
+
 # ---------------------------------------------------------------------------
 # Pure building blocks — shared by the env below AND the round engine
 # (DESIGN.md §2.2), so DDPG training and the simulation observe the world
@@ -61,8 +83,106 @@ def decode_action(cfg, action: jnp.ndarray, n_clients: int
     return p, f
 
 
+def make_env_params(cfg, assoc: jnp.ndarray, z: jnp.ndarray,
+                    dist: jnp.ndarray, n_samples: jnp.ndarray, *,
+                    fading_rho: float = 0.9,
+                    avail: jnp.ndarray | None = None,
+                    kappa: jnp.ndarray | None = None,
+                    p_max_w: jnp.ndarray | None = None,
+                    f_max_hz: jnp.ndarray | None = None,
+                    p_drop: jnp.ndarray | None = None,
+                    p_return: jnp.ndarray | None = None) -> EnvParams:
+    """Normalise the scenario slices into an ``EnvParams`` pytree.
+
+    An availability block exists iff the caller provides an initial mask or
+    a dropout chain — that choice fixes the observation dimension (2N vs
+    3N) at trace time, exactly like the engine's static/dynamic switch.
+    """
+    del cfg
+    n = assoc.shape[0]
+    has_avail = avail is not None or p_drop is not None
+    avail0 = (avail if avail is not None
+              else jnp.ones((n,), jnp.float32)) if has_avail else None
+    return EnvParams(assoc=assoc, z=z, dist=dist, n_samples=n_samples,
+                     fading_rho=jnp.asarray(fading_rho, jnp.float32),
+                     avail0=avail0, kappa=kappa, p_max_w=p_max_w,
+                     f_max_hz=f_max_hz, p_drop=p_drop, p_return=p_return)
+
+
+def env_dims(params: EnvParams) -> Tuple[int, int]:
+    """(state_dim, action_dim) of the MDP an ``EnvParams`` defines."""
+    n = params.assoc.shape[0]
+    return (2 + (params.avail0 is not None)) * n, 2 * n
+
+
+def _masked_assoc(params: EnvParams,
+                  avail: jnp.ndarray | None) -> jnp.ndarray:
+    """The engine's §6 contract: a dropped client is out of the
+    association — for the observation AND the bill."""
+    return params.assoc if avail is None else params.assoc * avail[:, None]
+
+
+def env_observe(params: EnvParams, gains: jnp.ndarray,
+                avail: jnp.ndarray | None) -> jnp.ndarray:
+    return observe(_masked_assoc(params, avail), gains, params.n_samples,
+                   avail)
+
+
+def env_decode_action(cfg, params: EnvParams, action: jnp.ndarray
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Action -> (p, f), clamped to the per-device scenario caps (mirrors
+    the engine's clamp in ``round_step``)."""
+    p, f = decode_action(cfg, action, params.assoc.shape[0])
+    if params.p_max_w is not None:
+        p = jnp.minimum(p, params.p_max_w)
+    if params.f_max_hz is not None:
+        f = jnp.minimum(f, params.f_max_hz)
+    return p, f
+
+
+def env_reset(cfg, params: EnvParams, key) -> Tuple[EnvState, jnp.ndarray]:
+    k1, k2 = jax.random.split(key)
+    gains = noma.rayleigh_gains(
+        k1, params.dist, path_loss_exponent=cfg.path_loss_exponent)
+    state = EnvState(gains, k2, params.avail0)
+    return state, env_observe(params, gains, state.avail)
+
+
+def env_step(cfg, params: EnvParams, state: EnvState, action: jnp.ndarray,
+             *, noma_enabled: bool = True
+             ) -> Tuple[EnvState, jnp.ndarray, jnp.ndarray, cost.RoundCost]:
+    """One MDP slot, fully pure: bill the availability the agent observed
+    when acting, then evolve the channel (and the dropout chain) for the
+    next observation.  ``lax.scan`` over this function IS an episode."""
+    p, f = env_decode_action(cfg, params, action)
+    assoc = _masked_assoc(params, state.avail)
+    rc = cost.round_cost(cfg, power_w=p, f_hz=f, gains=state.gains,
+                         assoc=assoc, z=params.z,
+                         n_samples=params.n_samples,
+                         noma_enabled=noma_enabled,
+                         capacitance=params.kappa)
+    reward = -rc.cost                                            # Eq. 37
+    if params.p_drop is not None:
+        k1, k2, k3 = jax.random.split(state.key, 3)
+        u = jax.random.uniform(k3, state.avail.shape)
+        avail = jnp.where(state.avail > 0, u >= params.p_drop,
+                          u < params.p_return).astype(jnp.float32)
+    else:
+        k1, k2 = jax.random.split(state.key)
+        avail = state.avail
+    gains = noma.evolve_gains(
+        k1, state.gains, params.dist,
+        path_loss_exponent=cfg.path_loss_exponent, rho=params.fading_rho)
+    new_state = EnvState(gains, k2, avail)
+    return new_state, env_observe(params, gains, avail), reward, rc
+
+
 class NomaHflEnv:
-    """Environment over a FIXED association (one scheduling epoch)."""
+    """Environment over a FIXED association (one scheduling epoch).
+
+    A stateful-looking wrapper over the pure ``env_reset`` / ``env_step``
+    above: it owns an ``EnvParams`` and nothing else, so the class and the
+    functional API are interchangeable by construction."""
 
     def __init__(self, cfg, assoc: jnp.ndarray, z: jnp.ndarray,
                  dist: jnp.ndarray, n_samples: jnp.ndarray,
@@ -75,86 +195,60 @@ class NomaHflEnv:
                  p_drop: jnp.ndarray | None = None,
                  p_return: jnp.ndarray | None = None):
         self.cfg = cfg
-        self.assoc = assoc                   # (N, M) one-hot
-        self.z = z                           # (M,)
-        self.dist = dist                     # (N, M)
-        self.n_samples = n_samples           # (N,)
-        self.rho = fading_rho
         self.noma_enabled = noma_enabled
         # scenario slices (DESIGN.md §6): the env must charge the SAME cost
         # the engine will bill at deployment — per-device κ and (p, f) caps
         # — and, with (p_drop, p_return), evolve the availability chain
         # between slots so the actor trains on a VARYING third obs block
-        self.kappa = kappa                   # (N,) or None
-        self.p_max_w = p_max_w               # (N,) or None
-        self.f_max_hz = f_max_hz             # (N,) or None
-        self.p_drop = p_drop                 # (N,) or None
-        self.p_return = p_return             # (N,) or None
+        self.params = make_env_params(cfg, assoc, z, dist, n_samples,
+                                      fading_rho=fading_rho, avail=avail,
+                                      kappa=kappa, p_max_w=p_max_w,
+                                      f_max_hz=f_max_hz, p_drop=p_drop,
+                                      p_return=p_return)
         self.n_clients = assoc.shape[0]
-        has_avail = avail is not None or p_drop is not None
-        self.avail0 = (avail if avail is not None else
-                       jnp.ones((self.n_clients,), jnp.float32)
-                       ) if has_avail else None
         self.associated = jnp.sum(assoc, axis=1) > 0
         # state: per-client (gain to own edge, data size)[, availability]
-        self.state_dim = (2 + has_avail) * self.n_clients
-        self.action_dim = 2 * self.n_clients
+        self.state_dim, self.action_dim = env_dims(self.params)
 
-    # -- helpers ---------------------------------------------------------------
+    # -- params views ----------------------------------------------------------
 
-    def _masked_assoc(self, avail: jnp.ndarray | None) -> jnp.ndarray:
-        """The engine's §6 contract: a dropped client is out of the
-        association — for the observation AND the bill."""
-        return self.assoc if avail is None else self.assoc * avail[:, None]
+    @property
+    def assoc(self) -> jnp.ndarray:
+        return self.params.assoc
 
-    def _observe(self, gains: jnp.ndarray,
-                 avail: jnp.ndarray | None) -> jnp.ndarray:
-        return observe(self._masked_assoc(avail), gains, self.n_samples,
-                       avail)
+    @property
+    def z(self) -> jnp.ndarray:
+        return self.params.z
+
+    @property
+    def dist(self) -> jnp.ndarray:
+        return self.params.dist
+
+    @property
+    def n_samples(self) -> jnp.ndarray:
+        return self.params.n_samples
+
+    @property
+    def kappa(self) -> jnp.ndarray | None:
+        return self.params.kappa
+
+    @property
+    def avail0(self) -> jnp.ndarray | None:
+        return self.params.avail0
 
     def decode_action(self, action: jnp.ndarray
                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        p, f = decode_action(self.cfg, action, self.n_clients)
-        # device-class caps, mirroring the engine's clamp in round_step
-        if self.p_max_w is not None:
-            p = jnp.minimum(p, self.p_max_w)
-        if self.f_max_hz is not None:
-            f = jnp.minimum(f, self.f_max_hz)
-        return p, f
+        return env_decode_action(self.cfg, self.params, action)
 
     # -- gym-like API ------------------------------------------------------------
 
     def reset(self, key) -> Tuple[EnvState, jnp.ndarray]:
-        k1, k2 = jax.random.split(key)
-        gains = noma.rayleigh_gains(
-            k1, self.dist, path_loss_exponent=self.cfg.path_loss_exponent)
-        state = EnvState(gains, k2, self.avail0)
-        return state, self._observe(gains, state.avail)
+        return env_reset(self.cfg, self.params, key)
 
     def step(self, state: EnvState, action: jnp.ndarray
              ) -> Tuple[EnvState, jnp.ndarray, jnp.ndarray, cost.RoundCost]:
-        p, f = self.decode_action(action)
-        # bill the availability the agent observed when acting
-        assoc = self._masked_assoc(state.avail)
-        rc = cost.round_cost(self.cfg, power_w=p, f_hz=f, gains=state.gains,
-                             assoc=assoc, z=self.z,
-                             n_samples=self.n_samples,
-                             noma_enabled=self.noma_enabled,
-                             capacitance=self.kappa)
-        reward = -rc.cost                                        # Eq. 37
-        if self.p_drop is not None:
-            k1, k2, k3 = jax.random.split(state.key, 3)
-            u = jax.random.uniform(k3, state.avail.shape)
-            avail = jnp.where(state.avail > 0, u >= self.p_drop,
-                              u < self.p_return).astype(jnp.float32)
-        else:
-            k1, k2 = jax.random.split(state.key)
-            avail = state.avail
-        gains = noma.evolve_gains(
-            k1, state.gains, self.dist,
-            path_loss_exponent=self.cfg.path_loss_exponent, rho=self.rho)
-        new_state = EnvState(gains, k2, avail)
-        return new_state, self._observe(gains, avail), reward, rc
+        return env_step(self.cfg, self.params, state, action,
+                        noma_enabled=self.noma_enabled)
 
 
 # ---------------------------------------------------------------------------
@@ -166,34 +260,48 @@ def rra_action(key, n_clients: int) -> jnp.ndarray:
     return jax.random.uniform(key, (2 * n_clients,))
 
 
+def grid_best_action(cfg, params: EnvParams, gains: jnp.ndarray, *,
+                     fixed_axis: int, fixed_frac: float = 0.5,
+                     n_grid: int = 16, noma_enabled: bool = True,
+                     avail: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Grid-optimise the free (shared) action fraction while the other
+    axis is fixed — the paper's FPA/FCA benchmarks optimise their free
+    variable 'in the same way as DDPG-RA' (§V-D); a 1-D grid is the
+    stand-in.  THE single implementation of that search: the env
+    baselines below and the engine's fpa/fca allocators both call it, so
+    the optimised surface is always the billed one (NOMA switch +
+    device κ + caps + availability mask) and cannot drift between the
+    two again.  Returns the (2N,) action."""
+    n = params.assoc.shape[0]
+    fracs = jnp.linspace(0.0, 1.0, n_grid)
+    assoc = _masked_assoc(params, avail)
+
+    def action_of(frac):
+        return jnp.full((2, n), fixed_frac).at[1 - fixed_axis].set(frac) \
+            .reshape(-1)
+
+    def cost_of(frac):
+        p, f = env_decode_action(cfg, params, action_of(frac))
+        rc = cost.round_cost(cfg, power_w=p, f_hz=f, gains=gains,
+                             assoc=assoc, z=params.z,
+                             n_samples=params.n_samples,
+                             noma_enabled=noma_enabled,
+                             capacitance=params.kappa)
+        return rc.cost
+
+    best = fracs[jnp.argmin(jax.vmap(cost_of)(fracs))]
+    return action_of(best)
+
+
 def _grid_best(e: "NomaHflEnv", gains: jnp.ndarray, fixed_axis: int,
                fixed_frac: float = 0.5, n_grid: int = 16,
                avail: jnp.ndarray | None = None) -> jnp.ndarray:
-    """Grid-optimise the free (shared) fraction while the other axis is
-    fixed — the paper's FPA/FCA benchmarks optimise their free variable
-    'in the same way as DDPG-RA' (§V-D); a 1-D grid is the stand-in.
-    Pass the slot's ``avail`` (EnvState.avail) in dropout scenarios so the
-    baseline optimises the masked bill ``step()`` actually charges."""
-    n = e.n_clients
-    fracs = jnp.linspace(0.0, 1.0, n_grid)
-    assoc = e.assoc if avail is None else e.assoc * avail[:, None]
-
-    def cost_of(frac):
-        a = jnp.full((2, n), fixed_frac).at[1 - fixed_axis].set(frac) \
-            .reshape(-1)
-        p, f = e.decode_action(a)
-        # optimise the SAME bill step() charges (NOMA switch + device κ +
-        # availability mask)
-        rc = cost.round_cost(e.cfg, power_w=p, f_hz=f, gains=gains,
-                             assoc=assoc, z=e.z, n_samples=e.n_samples,
-                             noma_enabled=e.noma_enabled,
-                             capacitance=e.kappa)
-        return rc.cost
-
-    costs = jax.vmap(cost_of)(fracs)
-    best = fracs[jnp.argmin(costs)]
-    a = jnp.full((2, n), fixed_frac).at[1 - fixed_axis].set(best)
-    return a.reshape(-1)
+    """``grid_best_action`` over an env instance.  Pass the slot's
+    ``avail`` (EnvState.avail) in dropout scenarios so the baseline
+    optimises the masked bill ``step()`` actually charges."""
+    return grid_best_action(e.cfg, e.params, gains, fixed_axis=fixed_axis,
+                            fixed_frac=fixed_frac, n_grid=n_grid,
+                            noma_enabled=e.noma_enabled, avail=avail)
 
 
 def fpa_best_action(e: "NomaHflEnv", gains: jnp.ndarray,

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import scenarios
-from repro.core import association, ddpg, engine, env, fuzzy
+from repro.core import association, ddpg, engine
 from repro.core.engine import (EngineSpec, RoundBundle, RoundState,
                                make_topology)
 
@@ -131,14 +131,8 @@ class HFLSimulation:
 
     def _associate(self) -> np.ndarray:
         """One-off association on the CURRENT state (does not advance it)."""
-        dynamic = self.spec.scenario != "static"
-        k = engine.round_keys(self.spec, self._state.key)[3]
-        scen = self._state.scenario
-        assoc = engine._associate(
-            self.cfg, self.spec, k, self._state.gains,
-            scen.dist if dynamic else self.bundle.dist, self.bundle.counts,
-            self._state.staleness, scen.avail if dynamic else None)
-        return np.asarray(assoc)
+        return np.asarray(engine.associate_snapshot(
+            self.cfg, self.spec, self._state, self.bundle))
 
     # -- public API -------------------------------------------------------------
 
@@ -164,47 +158,18 @@ class HFLSimulation:
 
     def train_ddpg(self, *, episodes: int = 20, steps_per_episode: int = 50,
                    warmup: int = 64, hidden: int = 128) -> Dict[str, list]:
-        """Train the DDPG allocator on the current association's env."""
-        cfg = self.cfg
-        assoc = jnp.asarray(self._associate(), jnp.float32)
-        # dynamic scenarios add the availability slice to the observation
-        # AND the device-class cost surface (κ, p/f caps): the actor must
-        # train on the same state and the same bill the engine uses
-        dynamic = self.spec.scenario != "static"
-        scen = self._state.scenario
-        e = env.NomaHflEnv(cfg, assoc, jnp.ones((cfg.n_edges,)),
-                           scen.dist if dynamic else self.bundle.dist,
-                           self.bundle.counts,
-                           fading_rho=self.spec.fading_rho,
-                           avail=scen.avail if dynamic else None,
-                           kappa=scen.kappa if dynamic else None,
-                           p_max_w=scen.p_max_w if dynamic else None,
-                           f_max_hz=scen.f_max_hz if dynamic else None,
-                           noma_enabled=self.spec.noma_enabled,
-                           p_drop=scen.p_drop if dynamic else None,
-                           p_return=scen.p_return if dynamic else None)
-        dcfg = ddpg.DDPGConfig(state_dim=e.state_dim, action_dim=e.action_dim,
-                               hidden=hidden, buffer_size=4096, batch_size=64)
-        key = self._state.key
-        key, k = jax.random.split(key)
-        agent = ddpg.init_ddpg(k, dcfg)
-        history: Dict[str, list] = {"episode_reward": []}
-        total_steps = 0
-        for ep in range(episodes):
-            key, k = jax.random.split(key)
-            state, obs = e.reset(k)
-            ep_reward = 0.0
-            for t in range(steps_per_episode):
-                key, ka, kt = jax.random.split(key, 3)
-                act = ddpg.select_action(ka, agent, obs)
-                state, obs2, reward, _ = e.step(state, act)
-                agent = ddpg.store(agent, dcfg, obs, act, reward, obs2)
-                obs = obs2
-                ep_reward += float(reward)
-                total_steps += 1
-                if total_steps >= warmup:
-                    agent, _ = ddpg.train_step(kt, agent, dcfg)
-            history["episode_reward"].append(ep_reward / steps_per_episode)
-        self.agent, self.agent_cfg = agent, dcfg
+        """Train the DDPG allocator on the current association's env.
+
+        A thin shell over the pure scanned driver ``ddpg.train_allocator``
+        (DESIGN.md §7): the whole of Algorithm 2 runs as one compiled XLA
+        program; this wrapper only advances the simulation key and keeps
+        the legacy list-of-floats history shape."""
+        key, k_train = jax.random.split(self._state.key)
+        dcfg = ddpg.allocator_config(self.cfg, self.spec, hidden=hidden)
+        agent, history = ddpg.train_allocator(
+            self.cfg, self.spec, self._state, self.bundle, dcfg, k_train,
+            episodes=episodes, steps_per_episode=steps_per_episode,
+            warmup=warmup)
+        self.agent, self.agent_cfg = jax.block_until_ready(agent), dcfg
         self._state = self._state._replace(key=key)
-        return history
+        return {k: np.asarray(v).tolist() for k, v in history.items()}

@@ -47,7 +47,10 @@ def pdd_schedule(edge_energy: jnp.ndarray, t_cloud: jnp.ndarray,
                  quota: Optional[int] = None,
                  outer_iters: int = 30, inner_iters: int = 40,
                  v0: float = 1.0, v_shrink: float = 0.8) -> PDDResult:
-    """edge_energy (M,) = E_m^cloud + E^edge; t_cloud (M,); U scalar (Eq. 32)."""
+    """edge_energy (M,) = E_m^cloud + E^edge; t_cloud (M,); U (Eq. 32) is
+    the edge-iteration time — a scalar in the paper's formulation, or (M,)
+    per-edge (the engine passes τ₂·max_{n∈N_m} t_n so the objective is
+    exactly the billed Eq. 23a cost; every update broadcasts)."""
     m = edge_energy.shape[0]
     tu = t_cloud + U
 

@@ -32,6 +32,7 @@ import time
 from typing import Any, Dict, List, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro import scenarios
@@ -74,6 +75,12 @@ class SweepGrid:
     seeds: Sequence[int] = (0,)
     n_rounds: int = 10
     iid: bool = True
+    # per-group DDPG training budget (used when the grid has
+    # allocator="ddpg" cells and no pre-trained actor is supplied)
+    ddpg_episodes: int = 12
+    ddpg_steps: int = 40
+    ddpg_warmup: int = 64
+    ddpg_hidden: int = 64
 
 
 def _resolve_scenario(entry: Any) -> Tuple[str, scenarios.ScenarioSpec]:
@@ -123,23 +130,26 @@ def run_sweep(cfg, grid: SweepGrid, *, out_dir: str = "results",
     One ``run_fleet`` call — hence one compile — per static-spec group;
     inside a group all scenarios × seeds run vmapped in a single program.
 
-    ``actor_params`` (a trained DDPG actor pytree) is required when the
-    grid has ``allocator="ddpg"`` cells — without it the engine would
-    silently fall back to the midpoint allocator and the persisted JSON
-    would mislabel baseline results as DDPG.
+    ``allocator="ddpg"`` cells need a trained actor.  By default every
+    ddpg CELL trains its own actor on its own world (scenario × seed) via
+    the scanned ``ddpg.train_allocator`` (budgeted by the grid's
+    ``ddpg_*`` fields; one training compile serves the whole group), and
+    the stacked actors ride the fleet vmap (``run_fleet_actors``) — a
+    dynamic group trains on the (3N,) scenario-sliced observation, a
+    static group on (2N,), so mixed grids just work and no cell is ever
+    billed with an actor trained on a different scenario.  Pass
+    ``actor_params`` (a pre-trained actor pytree) to use one shared actor
+    for every ddpg cell instead; then the grid must not mix observation
+    shapes.
     """
     cells = expand_grid(grid)
     ddpg_cells = [c for c in cells if c.allocator == "ddpg"]
-    if ddpg_cells:
-        if actor_params is None:
-            raise ValueError(
-                "grid has allocator='ddpg' cells but no actor_params were "
-                "given; pass a trained actor (e.g. HFLSimulation.train_ddpg "
-                "then sim.agent.actor) or drop the ddpg axis")
+    if ddpg_cells and actor_params is not None:
         if len({c.sspec.engine_kind() == "static" for c in ddpg_cells}) > 1:
             raise ValueError(
                 "ddpg cells mix static (2N,) and dynamic (3N,) observation "
-                "shapes — one actor cannot serve both; split the grid")
+                "shapes — one actor cannot serve both; split the grid or "
+                "drop actor_params to train per group")
     groups = _group_cells(cells)
     sweep_dir = os.path.join(out_dir, f"sweep_{grid.name}")
     if write_json:
@@ -162,13 +172,45 @@ def run_sweep(cfg, grid: SweepGrid, *, out_dir: str = "results",
     for spec, members in groups.items():
         pairs = [_init(c) for c in members]
         states, bundles = engine.stack_fleet(pairs)
+        cell_actors, train_s = None, 0.0
+        if spec.allocator == "ddpg" and actor_params is None:
+            # train ONE actor PER CELL on that cell's own world, all the
+            # cells of the group vmapped into a single XLA program
+            # (train_allocator_fleet), then ride the stacked actors
+            # through the fleet vmap: every ddpg row in the persisted
+            # JSON ran an actor trained on exactly the scenario × seed it
+            # reports
+            from repro.core import ddpg
+            t0 = time.perf_counter()
+            # fold a tag into each seed root so the training stream is
+            # decorrelated from init_simulation(seed)'s world-init stream
+            # (same root key, children 0/1 already spent on model/gains)
+            keys = jnp.stack([jax.random.fold_in(jax.random.key(c.seed),
+                                                 7919) for c in members])
+            agents, _ = ddpg.train_allocator_fleet(
+                cfg, spec, states, bundles, None, keys,
+                episodes=grid.ddpg_episodes,
+                steps_per_episode=grid.ddpg_steps,
+                warmup=grid.ddpg_warmup, hidden=grid.ddpg_hidden)
+            cell_actors = jax.block_until_ready(agents.actor)
+            train_s = time.perf_counter() - t0
         t0 = time.perf_counter()
-        _, ms = engine.run_fleet(cfg, spec, states, bundles, grid.n_rounds,
-                                 actor_params)
+        if cell_actors is not None:
+            _, ms = engine.run_fleet_actors(cfg, spec, states, bundles,
+                                            grid.n_rounds, cell_actors)
+        else:
+            _, ms = engine.run_fleet(cfg, spec, states, bundles,
+                                     grid.n_rounds, actor_params)
         jax.block_until_ready(ms.cost)
         dt = time.perf_counter() - t0
-        timings.append({"spec": dataclasses.asdict(spec),
-                        "n_cells": len(members), "wall_s": round(dt, 4)})
+        timing = {"spec": dataclasses.asdict(spec),
+                  "n_cells": len(members), "wall_s": round(dt, 4)}
+        if spec.allocator == "ddpg":
+            timing["ddpg_trained"] = actor_params is None
+            timing["ddpg_train_s"] = round(train_s, 4)
+            timing["ddpg_actors"] = (len(members) if actor_params is None
+                                     else "shared")
+        timings.append(timing)
         # one device->host transfer per metrics leaf for the WHOLE group
         host = {k: np.asarray(v) for k, v in ms._asdict().items()}
         for i, cell in enumerate(members):

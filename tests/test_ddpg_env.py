@@ -108,6 +108,158 @@ def test_ddpg_learns_simple_env(key):
     assert abs(final - 0.7) < 0.2
 
 
+def test_env_functional_matches_class(key):
+    """The class is a shell over env_reset/env_step: same params, same
+    trajectory."""
+    e = _env()
+    s_cls, o_cls = e.reset(key)
+    s_fn, o_fn = env.env_reset(HFL, e.params, key)
+    np.testing.assert_array_equal(np.asarray(o_cls), np.asarray(o_fn))
+    act = jnp.full((e.action_dim,), 0.3)
+    s_cls2, o_cls2, r_cls, _ = e.step(s_cls, act)
+    s_fn2, o_fn2, r_fn, _ = env.env_step(HFL, e.params, s_fn, act)
+    np.testing.assert_array_equal(np.asarray(o_cls2), np.asarray(o_fn2))
+    np.testing.assert_array_equal(np.asarray(r_cls), np.asarray(r_fn))
+    np.testing.assert_array_equal(np.asarray(s_cls2.gains),
+                                  np.asarray(s_fn2.gains))
+
+
+def test_train_step_before_store_is_masked(key):
+    """Regression (replay warmup): a train_step on an EMPTY buffer must be
+    a no-op — the all-zero init transitions are not experience."""
+    cfg = ddpg.DDPGConfig(state_dim=4, action_dim=2, hidden=16,
+                          buffer_size=32, batch_size=8)
+    st = ddpg.init_ddpg(key, cfg)
+    st2, losses = ddpg.train_step(key, st, cfg)
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(st2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert float(losses["critic_loss"]) == 0.0
+    assert float(losses["actor_loss"]) == 0.0
+    # one stored transition is enough to unmask the update
+    st3 = ddpg.store(st, cfg, jnp.ones((4,)), jnp.full((2,), 0.5),
+                     jnp.asarray(-1.0), jnp.ones((4,)))
+    st4, _ = ddpg.train_step(key, st3, cfg)
+    assert not np.allclose(jax.tree.leaves(st3.actor)[0],
+                           jax.tree.leaves(st4.actor)[0])
+    # ... and a FULL buffer whose write index wrapped back to 0 still
+    # trains — the mask keys on (idx == 0 AND not full), not idx alone
+    for i in range(cfg.buffer_size):
+        st3 = ddpg.store(st3, cfg, jnp.ones((4,)), jnp.full((2,), 0.5),
+                         jnp.asarray(-1.0), jnp.ones((4,)))
+    st3 = st3._replace(buffer_idx=jnp.zeros((), jnp.int32))
+    assert bool(st3.buffer_full)
+    st5, _ = ddpg.train_step(key, st3, cfg)
+    assert not np.allclose(jax.tree.leaves(st3.critic)[0],
+                           jax.tree.leaves(st5.critic)[0])
+
+
+def _sim_setup(scenario=None, kind="static"):
+    import dataclasses
+
+    from repro.core import engine
+    small = dataclasses.replace(HFL, n_clients=8, n_edges=2,
+                                clients_per_edge=3, min_samples=60,
+                                max_samples=120, hidden=16, input_dim=32)
+    spec = engine.EngineSpec(policy="gcea", scheduler="fastest",
+                             scenario=kind)
+    state, bundle, _ = engine.init_simulation(small, seed=0,
+                                              scenario=scenario)
+    return small, spec, state, bundle
+
+
+@pytest.mark.parametrize("scenario,kind", [(None, "static"),
+                                           ("full_dynamic", "dynamic")])
+def test_train_allocator_matches_eager_oracle(scenario, kind):
+    """Tentpole parity: the fully scanned trainer and the eager oracle walk
+    the SAME key stream through the SAME pure pieces — identical episode
+    rewards, losses and final actor weights."""
+    small, spec, state, bundle = _sim_setup(scenario, kind)
+    dcfg = ddpg.allocator_config(small, spec, hidden=16, buffer_size=64,
+                                 batch_size=8)
+    key = jax.random.key(3)
+    kw = dict(episodes=2, steps_per_episode=8, warmup=4)
+    agent_s, hist_s = ddpg.train_allocator(small, spec, state, bundle,
+                                           dcfg, key, **kw)
+    agent_e, hist_e = ddpg.train_allocator_eager(small, spec, state, bundle,
+                                                 dcfg, key, **kw)
+    for k in ("episode_reward", "critic_loss", "actor_loss"):
+        assert hist_s[k].shape == (2,)
+        np.testing.assert_allclose(np.asarray(hist_s[k]),
+                                   np.asarray(hist_e[k]),
+                                   rtol=1e-5, atol=1e-6, err_msg=k)
+    for a, b in zip(jax.tree.leaves(agent_s.actor),
+                    jax.tree.leaves(agent_e.actor)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+    assert int(agent_s.step) == int(agent_e.step) > 0
+
+
+def test_train_allocator_dynamic_observation_and_actor_io():
+    """Under full_dynamic the trainer's MDP is the (3N,) scenario-sliced
+    observation and the trained actor maps it to a (2N,) action in [0,1] —
+    the exact I/O the engine's ddpg allocator path replays."""
+    from repro.core import engine
+    small, spec, state, bundle = _sim_setup("full_dynamic", "dynamic")
+    n = small.n_clients
+    dcfg = ddpg.allocator_config(small, spec, hidden=16)
+    assert dcfg.state_dim == 3 * n and dcfg.action_dim == 2 * n
+    agent, hist = ddpg.train_allocator(small, spec, state, bundle, dcfg,
+                                       jax.random.key(0), episodes=1,
+                                       steps_per_episode=4, warmup=2)
+    assert np.isfinite(np.asarray(hist["episode_reward"])).all()
+    obs = env.observe(jnp.zeros((n, small.n_edges)), state.gains,
+                      bundle.counts, avail=state.scenario.avail)
+    act = ddpg.actor_apply(agent.actor, obs)
+    assert act.shape == (2 * n,)
+    assert float(act.min()) >= 0.0 and float(act.max()) <= 1.0
+    # and the engine consumes the trained actor end-to-end
+    import dataclasses
+    ddpg_spec = dataclasses.replace(spec, allocator="ddpg")
+    _, m = engine.round_step_jit(small, ddpg_spec, state, bundle,
+                                 agent.actor)
+    assert np.isfinite(float(m.cost))
+
+
+def test_engine_fpa_fca_match_env_definitions(key):
+    """Regression (baseline drift): the engine's fpa/fca columns must mean
+    what env.fpa_best_action / fca_best_action define — the fixed axis
+    pinned at its MAX, the free axis grid-optimised on the billed cost."""
+    import dataclasses
+
+    from repro.core import engine
+    small = dataclasses.replace(HFL, n_clients=8, n_edges=2)
+    rng = np.random.default_rng(4)
+    n, m = 8, 2
+    assoc = np.zeros((n, m), np.float32)
+    assoc[np.arange(n), rng.integers(0, m, n)] = 1.0
+    assoc = jnp.asarray(assoc)
+    dist = jnp.asarray(rng.uniform(50.0, 300.0, (n, m)))
+    counts = jnp.asarray(rng.integers(60, 120, n), jnp.float32)
+    gains = jax.random.gamma(key, 1.0, (n, m)) * 1e-10
+    e = env.NomaHflEnv(small, assoc, jnp.ones((m,)), dist, counts)
+    for allocator, best_fn in (("fpa", env.fpa_best_action),
+                               ("fca", env.fca_best_action)):
+        spec = engine.EngineSpec(policy="gcea", allocator=allocator,
+                                 scheduler="fastest")
+        p_eng, f_eng = engine._allocate(small, spec, key, assoc, gains,
+                                        counts, None, None, dist)
+        p_env, f_env = e.decode_action(best_fn(e, gains))
+        np.testing.assert_allclose(np.asarray(p_eng), np.asarray(p_env),
+                                   rtol=1e-6, err_msg=allocator)
+        np.testing.assert_allclose(np.asarray(f_eng), np.asarray(f_env),
+                                   rtol=1e-6, err_msg=allocator)
+    # and the definitions themselves: fpa pins power at p_max, fca pins
+    # frequency at f_max (§V-D)
+    spec = engine.EngineSpec(allocator="fpa")
+    p_eng, _ = engine._allocate(small, spec, key, assoc, gains, counts,
+                                None, None, dist)
+    np.testing.assert_allclose(np.asarray(p_eng), small.p_max_w, rtol=1e-6)
+    spec = engine.EngineSpec(allocator="fca")
+    _, f_eng = engine._allocate(small, spec, key, assoc, gains, counts,
+                                None, None, dist)
+    np.testing.assert_allclose(np.asarray(f_eng), small.f_max_hz, rtol=1e-6)
+
+
 def test_baseline_allocators():
     a = env.rra_action(jax.random.key(0), 4)
     assert a.shape == (8,) and float(a.min()) >= 0 and float(a.max()) <= 1

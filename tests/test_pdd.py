@@ -68,6 +68,74 @@ def test_paper_literal_no_quota():
     assert set(np.unique(zb)).issubset({0.0, 1.0})
 
 
+def test_pdd_objective_is_the_billed_cost():
+    """Regression (scheduler/bill consistency): with the engine's per-edge
+    U = τ₂·max_{n∈N_m} t_n, the PDD objective at its own z must equal the
+    Eq. 23a cost ``apply_schedule`` bills for that z — the scheduler may
+    not optimise a different surface than the engine charges."""
+    import dataclasses
+
+    from repro.configs.hfl_mnist import CONFIG
+    from repro.core import cost
+
+    cfg = dataclasses.replace(CONFIG, n_clients=16, n_edges=4)
+    rng = np.random.default_rng(5)
+    n, m = cfg.n_clients, cfg.n_edges
+    assoc = np.zeros((n, m), np.float32)
+    assoc[np.arange(n), rng.integers(0, m, n)] = 1.0
+    rc_all = cost.round_cost(
+        cfg,
+        power_w=jnp.asarray(rng.uniform(cfg.p_min_w, cfg.p_max_w, n)),
+        f_hz=jnp.asarray(rng.uniform(cfg.f_min_hz, cfg.f_max_hz, n)),
+        gains=jnp.asarray(rng.uniform(1e-12, 1e-9, (n, m))),
+        assoc=jnp.asarray(assoc), z=jnp.ones((m,)),
+        n_samples=jnp.asarray(rng.integers(60, 120, n), jnp.float32))
+    t_cloud = jnp.full((m,), cfg.edge_model_size_bits / cfg.edge_rate_bps)
+    U = rc_all.per_edge_time_s - t_cloud           # τ₂ × slowest client
+    for quota in (1, 2, 3):
+        res = pdd.pdd_schedule(rc_all.per_edge_energy_j, t_cloud, U,
+                               lam_t=cfg.lambda_t, lam_e=cfg.lambda_e,
+                               quota=quota)
+        billed = cost.apply_schedule(cfg, rc_all, res.z_binary)
+        np.testing.assert_allclose(float(res.objective),
+                                   float(billed.cost), rtol=1e-6)
+
+
+def test_engine_schedule_passes_tau2_scaled_U():
+    """The engine's _schedule wiring: its PDD problem bills per-edge time
+    ``t_cloud + τ₂·max t_n`` — exactly ``rc_all.per_edge_time_s``."""
+    import dataclasses
+
+    from repro.configs.hfl_mnist import CONFIG
+    from repro.core import cost, engine
+
+    cfg = dataclasses.replace(CONFIG, n_clients=12, n_edges=4,
+                              clients_per_edge=3, min_samples=60,
+                              max_samples=120, hidden=16, input_dim=32)
+    spec = engine.EngineSpec(policy="fcea", scheduler="pdd")
+    state, bundle, _ = engine.init_simulation(cfg, seed=0)
+    _, m = engine.round_step_jit(cfg, spec, state, bundle)
+    # the billed per-round cost must be reachable by the PDD objective at
+    # the engine's chosen z: reconstruct rc_all on the PRE-round state
+    rng_keys = engine.round_keys(spec, state.key)
+    gains = __import__("repro.core.noma", fromlist=["noma"]).evolve_gains(
+        rng_keys[2], state.gains, bundle.dist,
+        path_loss_exponent=cfg.path_loss_exponent, rho=spec.fading_rho)
+    assoc = engine._associate(cfg, spec, rng_keys[3], gains, bundle.dist,
+                              bundle.counts, state.staleness
+                              ).astype(jnp.float32)
+    p, f = engine._allocate(cfg, spec, rng_keys[4], assoc, gains,
+                            bundle.counts, None, None, bundle.dist)
+    rc_all = cost.round_cost(cfg, power_w=p, f_hz=f, gains=gains,
+                             assoc=assoc, z=jnp.ones((cfg.n_edges,)),
+                             n_samples=bundle.counts)
+    z = engine._schedule(cfg, spec, rc_all)
+    np.testing.assert_array_equal(np.asarray(m.z), np.asarray(z))
+    np.testing.assert_allclose(
+        float(cost.apply_schedule(cfg, rc_all, z).cost), float(m.cost),
+        rtol=1e-6)
+
+
 def test_semi_sync_fastest():
     t = jnp.asarray([3.0, 1.0, 2.0, 5.0])
     z = np.asarray(pdd.semi_sync_fastest(t, 2))

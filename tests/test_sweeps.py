@@ -104,16 +104,66 @@ def test_custom_scenario_spec_parameters_survive(tmp_path):
     assert rows["n_available"] == [0, 0]
 
 
-def test_ddpg_cells_require_actor_params():
-    """Regression: without a trained actor the engine silently runs the
-    midpoint allocator — the sweep must refuse to mislabel those results."""
-    grid = _grid(scenarios=("static",), allocators=("mid", "ddpg"))
-    with pytest.raises(ValueError, match="actor_params"):
-        sweeps.run_sweep(SMALL, grid, write_json=False)
+def test_ddpg_group_trains_its_own_actor(tmp_path):
+    """The per-cell DDPG path: with no pre-trained actor, every ddpg cell
+    trains its own actor on its own world (one vmapped
+    ``train_allocator_fleet`` program per group) and the stacked actors
+    ride the fleet vmap — no silent fallback to the midpoint allocator,
+    no error."""
+    grid = _grid(scenarios=("full_dynamic",), policies=("gcea",),
+                 schedulers=("fastest",), allocators=("ddpg", "mid"),
+                 seeds=(0, 1), ddpg_episodes=1, ddpg_steps=4,
+                 ddpg_warmup=2, ddpg_hidden=16)
+    summary = sweeps.run_sweep(SMALL, grid, out_dir=str(tmp_path))
+    assert summary["n_cells"] == 4
+    trained = [g for g in summary["groups"]
+               if g["spec"]["allocator"] == "ddpg"]
+    assert len(trained) == 1
+    assert trained[0]["ddpg_trained"] is True
+    assert trained[0]["ddpg_train_s"] > 0
+    for cid, row in summary["final"].items():
+        assert np.isfinite(row["mean_cost"])
+    # both allocators really ran: the ddpg and mid trajectories differ
+    costs = {cid: summary["cells"][cid]["cost"]
+             for cid in summary["cells"]}
+    ddpg_cells = [v for c, v in sorted(costs.items()) if "__ddpg__" in c]
+    mid_cells = [v for c, v in sorted(costs.items()) if "__mid__" in c]
+    assert len(ddpg_cells) == len(mid_cells) == 2
+    assert ddpg_cells[0] != mid_cells[0]
 
 
-def test_ddpg_cells_reject_mixed_observation_shapes():
-    """One actor cannot serve both static (2N,) and dynamic (3N,) obs."""
+def test_ddpg_cells_train_on_their_own_world(tmp_path):
+    """Honest columns: every ddpg cell's actor is trained on that cell's
+    own scenario × seed — two seeds must yield DIFFERENT ddpg
+    trajectories than a single shared actor would explain, and the group
+    timing records one actor per cell."""
+    grid = _grid(scenarios=("full_dynamic",), policies=("gcea",),
+                 schedulers=("fastest",), allocators=("ddpg",),
+                 seeds=(0, 1), ddpg_episodes=1, ddpg_steps=4,
+                 ddpg_warmup=2, ddpg_hidden=16)
+    summary = sweeps.run_sweep(SMALL, grid, write_json=False)
+    (g,) = summary["groups"]
+    assert g["ddpg_actors"] == 2
+    costs = [summary["cells"][c]["cost"] for c in sorted(summary["cells"])]
+    assert costs[0] != costs[1]
+
+
+def test_ddpg_static_and_dynamic_groups_each_train(tmp_path):
+    """Mixed observation shapes are fine WITHOUT a shared actor: the
+    static group trains a (2N,) actor, the dynamic group a (3N,) one."""
+    grid = _grid(scenarios=("static", "full_dynamic"), policies=("gcea",),
+                 schedulers=("fastest",), allocators=("ddpg",),
+                 ddpg_episodes=1, ddpg_steps=4, ddpg_warmup=2,
+                 ddpg_hidden=16)
+    summary = sweeps.run_sweep(SMALL, grid, write_json=False)
+    assert summary["n_cells"] == 2
+    assert all(g["ddpg_trained"] for g in summary["groups"])
+    assert len(summary["groups"]) == 2      # one compile+actor per kind
+
+
+def test_ddpg_cells_reject_mixed_observation_shapes_with_shared_actor():
+    """One PRE-TRAINED actor cannot serve both static (2N,) and dynamic
+    (3N,) observations — that path must still refuse."""
     grid = _grid(scenarios=("static", "full_dynamic"), allocators=("ddpg",))
     with pytest.raises(ValueError, match="observation"):
         sweeps.run_sweep(SMALL, grid, write_json=False,
