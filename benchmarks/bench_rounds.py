@@ -1,14 +1,22 @@
-"""Rounds/sec for the HFL round drivers at (N, M) ∈ {(64, 4), (256, 8),
-(1024, 16)}:
+"""Rounds/sec for the HFL round drivers, as a scaling curve up to
+(4096, 32) clients × edges:
 
 * ``eager``   — a faithful replica of the pre-engine ``run_round``: per-edge
   fuzzy scoring through host numpy, numpy association, TWO ``round_cost``
-  evaluations, a per-iteration-dispatched python τ₂ loop and per-round host
-  syncs.  This is the baseline the round-engine refactor retired.
+  evaluations (pairwise SIC), a per-iteration-dispatched python τ₂ loop and
+  per-round host syncs.  This is the baseline the round-engine refactor
+  retired; it is only run up to (1024, 16) — beyond that its O(N²M)
+  pairwise SIC materialises GB-scale temporaries.
 * ``stepped`` — one jitted ``round_step`` dispatch per round (the wrapper's
   ``run``): same math, one program, still a host sync per round.
 * ``scanned`` — ``engine.run_scanned``: the experiment as ONE ``lax.scan``.
 * ``fleet``   — ``engine.run_fleet``: vmap of the scanned program over seeds.
+
+Each size also records ``serial_rps`` — the scanned driver with the legacy
+serial association resolver + pairwise SIC (``EngineSpec(resolver="serial",
+sic_impl="pairwise")``) — the A/B for the PR-4 hot-path work — and a
+per-stage breakdown (associate / allocate / schedule / train / eval, each
+jitted separately, best-of-k) so a regression is attributable to a stage.
 
 The model/data are kept small so the numbers measure the ROUND pipeline,
 not the MLP.  Writes BENCH_rounds.json at the repo root so the perf
@@ -29,7 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, median_rps
 from repro.configs.hfl_mnist import CONFIG
 from repro.core import (aggregation, association, cost, engine, fuzzy, noma,
                         pdd)
@@ -39,8 +47,13 @@ from repro.models.mlp import MLPClassifier
 OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_rounds.json")
 
 SIZES = ((64, 4), (256, 8), (1024, 16))
+# scanned/fleet-only scaling tail: the eager baseline cannot run here
+SCALE_SIZES = ((2048, 32), (4096, 32))
 # gcea + fastest is the fully host-callback-free acceptance path.
 SPEC = engine.EngineSpec(policy="gcea", scheduler="fastest")
+# the legacy hot path (PR-1..3): serial while-loop resolver, pairwise SIC
+SPEC_SERIAL = dataclasses.replace(SPEC, resolver="serial",
+                                  sic_impl="pairwise")
 
 
 def _cfg(n: int, m: int):
@@ -108,10 +121,12 @@ class LegacyEagerSim:
         quota = max(1, int(round(cfg.semi_sync_fraction * cfg.n_edges)))
         rc_all = cost.round_cost(cfg, power_w=p, f_hz=f, gains=self.gains,
                                  assoc=assoc, z=jnp.ones((cfg.n_edges,)),
-                                 n_samples=bundle.counts)
+                                 n_samples=bundle.counts,
+                                 sic_impl="pairwise")
         z = pdd.semi_sync_fastest(rc_all.per_edge_time_s, quota)
         rc = cost.round_cost(cfg, power_w=p, f_hz=f, gains=self.gains,
-                             assoc=assoc, z=z, n_samples=bundle.counts)
+                             assoc=assoc, z=z, n_samples=bundle.counts,
+                             sic_impl="pairwise")
         selected = jnp.sum(assoc, axis=1) > 0
         edge_params = aggregation.replicate(self.global_params, cfg.n_edges)
         client_params = aggregation.broadcast_to_clients(
@@ -140,54 +155,111 @@ class LegacyEagerSim:
         return acc
 
 
+def _best_ms(fn, *args, repeats: int = 5) -> float:
+    """Best-of-k wall time of a compiled callable, in ms."""
+    jax.block_until_ready(fn(*args))                  # compile + warm
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e3
+
+
+def stage_breakdown(cfg, state, bundle) -> Dict[str, float]:
+    """Per-stage ms for one round's pieces, each jitted separately on the
+    init state — the attribution view behind the scanned rounds/sec."""
+    model = MLPClassifier(cfg.input_dim, cfg.hidden, cfg.n_classes)
+    _, _, _, k_assoc, k_alloc, k_train = engine.round_keys(SPEC, state.key)
+
+    f_assoc = jax.jit(lambda g, s: engine._associate(
+        cfg, SPEC, k_assoc, g, bundle.dist, bundle.counts, s))
+    assoc = f_assoc(state.gains, state.staleness).astype(jnp.float32)
+    f_alloc = jax.jit(lambda a, g: engine._allocate(
+        cfg, SPEC, k_alloc, a, g, bundle.counts, None, None, bundle.dist))
+    p, f = f_alloc(assoc, state.gains)
+
+    def _sched(p_, f_, g_, a_):
+        rc_all = cost.round_cost(
+            cfg, power_w=p_, f_hz=f_, gains=g_, assoc=a_,
+            z=jnp.ones((cfg.n_edges,)), n_samples=bundle.counts,
+            noma_enabled=SPEC.noma_enabled, sic_impl=SPEC.sic_impl,
+            sic_max_per_edge=engine.quota_for(cfg, SPEC))
+        z = engine._schedule(cfg, SPEC, rc_all)
+        return cost.apply_schedule(cfg, rc_all, z)
+
+    f_sched = jax.jit(_sched)
+    z1 = jnp.ones((cfg.n_edges,))
+    f_train = jax.jit(lambda st, a: engine._train(cfg, SPEC, model, k_train,
+                                                  st, bundle, a, z1))
+    f_eval = jax.jit(lambda gp: (model.accuracy(gp, bundle.test_x,
+                                                bundle.test_y),
+                                 model.loss(gp, (bundle.test_x,
+                                                 bundle.test_y))))
+    return {
+        "associate_ms": round(_best_ms(f_assoc, state.gains,
+                                       state.staleness), 3),
+        "allocate_ms": round(_best_ms(f_alloc, assoc, state.gains), 3),
+        "schedule_ms": round(_best_ms(f_sched, p, f, state.gains, assoc), 3),
+        "train_ms": round(_best_ms(f_train, state, assoc), 3),
+        "eval_ms": round(_best_ms(f_eval, state.global_params), 3),
+    }
+
+
 def bench_size(n: int, m: int, *, eager_rounds: int, scan_rounds: int,
-               fleet_seeds: int) -> Dict[str, float]:
+               fleet_seeds: int, with_eager: bool = True
+               ) -> Dict[str, float]:
     cfg = _cfg(n, m)
     state, bundle, aux = engine.init_simulation(cfg, seed=0)
+    out: Dict[str, float] = {}
 
-    # -- legacy eager (the retired execution model) --------------------------
-    legacy = LegacyEagerSim(cfg, state, bundle, aux["topo"], aux["rng"])
-    legacy.run_round()                                # compile
-    t0 = time.perf_counter()
-    for _ in range(eager_rounds):
-        legacy.run_round()
-    eager_rps = eager_rounds / (time.perf_counter() - t0)
+    if with_eager:
+        # -- legacy eager (the retired execution model) ----------------------
+        legacy = LegacyEagerSim(cfg, state, bundle, aux["topo"], aux["rng"])
+        legacy.run_round()                            # compile
+        t0 = time.perf_counter()
+        for _ in range(eager_rounds):
+            legacy.run_round()
+        out["eager_rps"] = round(eager_rounds / (time.perf_counter() - t0),
+                                 3)
 
-    # -- stepped: one jitted round_step per round ----------------------------
-    sim = HFLSimulation(cfg, seed=0, policy=SPEC.policy,
-                        scheduler=SPEC.scheduler)
-    sim.run_round()                                   # compile
-    t0 = time.perf_counter()
-    sim.run(eager_rounds)
-    stepped_rps = eager_rounds / (time.perf_counter() - t0)
+        # -- stepped: one jitted round_step per round ------------------------
+        sim = HFLSimulation(cfg, seed=0, policy=SPEC.policy,
+                            scheduler=SPEC.scheduler)
+        sim.run_round()                               # compile
+        t0 = time.perf_counter()
+        sim.run(eager_rounds)
+        out["stepped_rps"] = round(eager_rounds / (time.perf_counter() - t0),
+                                   3)
 
     # -- scanned: the whole experiment is one XLA program --------------------
-    jax.block_until_ready(
-        engine.run_scanned(cfg, SPEC, state, bundle, scan_rounds))
-    t0 = time.perf_counter()
-    jax.block_until_ready(
-        engine.run_scanned(cfg, SPEC, state, bundle, scan_rounds))
-    scanned_rps = scan_rounds / (time.perf_counter() - t0)
+    scanned_rps = median_rps(
+        lambda: engine.run_scanned(cfg, SPEC, state, bundle, scan_rounds),
+        scan_rounds)
+    out["scanned_rps"] = round(scanned_rps, 3)
+
+    # -- A/B: the legacy serial resolver + pairwise SIC, same driver ---------
+    if with_eager:     # the pairwise SIC shares eager's memory wall
+        out["serial_rps"] = round(median_rps(
+            lambda: engine.run_scanned(cfg, SPEC_SERIAL, state, bundle,
+                                       scan_rounds), scan_rounds), 3)
 
     # -- fleet: vmap the scanned program over independent seeds --------------
     pairs = [engine.init_simulation(cfg, seed=s)[:2]
              for s in range(fleet_seeds)]
     states, bundles = engine.stack_fleet(pairs)
-    jax.block_until_ready(
-        engine.run_fleet(cfg, SPEC, states, bundles, scan_rounds))
-    t0 = time.perf_counter()
-    jax.block_until_ready(
-        engine.run_fleet(cfg, SPEC, states, bundles, scan_rounds))
-    fleet_rps = fleet_seeds * scan_rounds / (time.perf_counter() - t0)
+    fleet_rps = median_rps(
+        lambda: engine.run_fleet(cfg, SPEC, states, bundles, scan_rounds),
+        fleet_seeds * scan_rounds)
+    out["fleet_rps"] = round(fleet_rps, 3)
 
-    return {"eager_rps": round(eager_rps, 3),
-            "stepped_rps": round(stepped_rps, 3),
-            "scanned_rps": round(scanned_rps, 3),
-            "fleet_rps": round(fleet_rps, 3),
-            "scan_speedup": round(scanned_rps / eager_rps, 2),
-            "fleet_speedup": round(fleet_rps / eager_rps, 2),
-            "eager_rounds": eager_rounds, "scan_rounds": scan_rounds,
-            "fleet_seeds": fleet_seeds}
+    if with_eager:
+        out["scan_speedup"] = round(scanned_rps / out["eager_rps"], 2)
+        out["fleet_speedup"] = round(fleet_rps / out["eager_rps"], 2)
+    out.update(eager_rounds=eager_rounds if with_eager else 0,
+               scan_rounds=scan_rounds, fleet_seeds=fleet_seeds,
+               stages=stage_breakdown(cfg, state, bundle))
+    return out
 
 
 def main(argv=None) -> None:
@@ -197,16 +269,19 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     results: Dict[str, Dict[str, float]] = {}
-    for n, m in SIZES:
+    sizes = [(n, m, True) for n, m in SIZES]
+    sizes += [(n, m, False) for n, m in SCALE_SIZES]
+    for n, m, with_eager in sizes:
         big = n >= 1024
         r = bench_size(
             n, m,
             eager_rounds=3 if (args.quick or big) else 6,
             scan_rounds=5 if (args.quick or big) else 15,
-            fleet_seeds=2 if (args.quick or big) else 4)
+            fleet_seeds=2 if (args.quick or big) else 4,
+            with_eager=with_eager)
         results[f"{n}x{m}"] = r
         emit(f"rounds_n{n}_m{m}", 1e6 / r["scanned_rps"],
-             {k: v for k, v in r.items()})
+             {k: v for k, v in r.items() if k != "stages"})
 
     with open(OUT, "w") as fh:
         json.dump({"spec": dataclasses.asdict(SPEC), "results": results},

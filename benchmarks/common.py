@@ -29,3 +29,25 @@ def timed(fn: Callable, *args, repeat: int = 1) -> float:
     for _ in range(repeat):
         fn(*args)
     return (time.time() - t0) / repeat * 1e6
+
+
+def median_rps(fn: Callable, rounds: int, repeats: int = 3,
+               warm: bool = True) -> float:
+    """Median-of-k rounds/sec of a jax driver call.
+
+    Single-shot driver timings are scheduler-noise limited on this host
+    (BENCH_sweeps.json once recorded a *negative* dynamic-scenario
+    overhead from exactly that); the median over k runs is what every
+    BENCH_*.json records.  ``warm`` runs the callable once first so the
+    compile never lands in a timed sample.
+    """
+    import jax
+    if warm:
+        jax.block_until_ready(fn())
+    samples = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        samples.append(rounds / (time.perf_counter() - t0))
+    samples.sort()
+    return samples[len(samples) // 2]

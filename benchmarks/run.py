@@ -36,7 +36,8 @@ def main(argv=None) -> int:
         ("fig_ddpg_cost", lambda: fig_ddpg_cost.main(episodes)),
         ("fig_cost_vs_nm", fig_cost_vs_nm.main),
         ("fig_cost_vs_dn", fig_cost_vs_dn.main),
-        ("bench_kernels", bench_kernels.main),
+        ("bench_kernels",
+         lambda: bench_kernels.main(["--quick"] if args.quick else [])),
         ("bench_roofline", bench_roofline.main),
     ]
     failed = 0

@@ -1,6 +1,23 @@
-"""Render EXPERIMENTS.md tables from the dry-run jsonl records."""
+"""Render EXPERIMENTS.md tables from the dry-run jsonl records, and the
+paper's Figs. 8-12-style cost/accuracy comparison tables from sweep
+summaries.
+
+  python results/render_tables.py dryrun  results/dryrun.jsonl
+  python results/render_tables.py roofline results/dryrun.jsonl
+  python results/render_tables.py sweep   results/sweep_showcase
+  python results/render_tables.py sweep   'results/sweep_*'     # glob ok
+
+``sweep`` accepts a sweep directory, its summary.json path, or a glob of
+either; each summary renders one table per metric (final accuracy, mean
+round cost) with scenarios as rows and scheme columns (policy/allocator/
+scheduler/NOMA), mean ± spread over seeds — the Figs. 8-12 protocol view.
+"""
+import glob as _glob
 import json
+import math
+import os
 import sys
+from collections import defaultdict
 
 
 def load(path):
@@ -60,7 +77,86 @@ def roofline_table(recs):
     return "\n".join(rows)
 
 
+# ---------------------------------------------------------------------------
+# Sweep summaries -> Figs. 8-12 comparison tables
+# ---------------------------------------------------------------------------
+
+def _parse_cell_id(cid):
+    """scenario__policy__allocator__scheduler__(noma|oma)__sSEED ->
+    (scenario, scheme label, seed)."""
+    scenario, policy, allocator, scheduler, noma, seed = cid.rsplit("__", 5)
+    return scenario, f"{policy}/{allocator}/{scheduler}/{noma}", int(seed[1:])
+
+
+def _mean_std(vals):
+    mean = sum(vals) / len(vals)
+    if len(vals) < 2:
+        return mean, 0.0
+    var = sum((v - mean) ** 2 for v in vals) / (len(vals) - 1)
+    return mean, math.sqrt(var)
+
+
+def _fmt(mean, std, digits=3):
+    if std == 0.0:
+        return f"{mean:.{digits}f}"
+    return f"{mean:.{digits}f} ± {std:.{digits}f}"
+
+
+def sweep_tables(summary):
+    """Markdown tables from one run_sweep summary dict."""
+    # rows[metric][scenario][scheme] -> list over seeds
+    rows = defaultdict(lambda: defaultdict(lambda: defaultdict(list)))
+    for cid, final in summary["final"].items():
+        scenario, scheme, _ = _parse_cell_id(cid)
+        for metric in ("accuracy", "mean_cost"):
+            rows[metric][scenario][scheme].append(float(final[metric]))
+    titles = {"accuracy": "Final accuracy",
+              "mean_cost": "Mean round cost (Eq. 23a)"}
+    out = [f"## sweep `{summary['name']}` — {summary['n_cells']} cells, "
+           f"{summary['n_rounds']} rounds, "
+           f"{summary['n_compiles']} compiles"]
+    scenario_order = summary.get("axes", {}).get("scenarios") or sorted(
+        {s for m in rows.values() for s in m})
+    for metric, title in titles.items():
+        schemes = sorted({s for per in rows[metric].values() for s in per})
+        out.append(f"\n### {title}\n")
+        out.append("| scenario | " + " | ".join(schemes) + " |")
+        out.append("|" + "---|" * (len(schemes) + 1))
+        for scenario in scenario_order:
+            if scenario not in rows[metric]:
+                continue
+            cells = []
+            for scheme in schemes:
+                vals = rows[metric][scenario].get(scheme)
+                cells.append(_fmt(*_mean_std(vals)) if vals else "—")
+            out.append(f"| {scenario} | " + " | ".join(cells) + " |")
+    return "\n".join(out)
+
+
+def _iter_summaries(path):
+    """Yield summary dicts from a dir / summary.json / glob of either."""
+    matches = sorted(_glob.glob(path)) or [path]
+    for p in matches:
+        if os.path.isdir(p):
+            p = os.path.join(p, "summary.json")
+        if not os.path.exists(p):
+            continue
+        with open(p) as fh:
+            yield json.load(fh)
+
+
+def sweep_report(path):
+    parts = [sweep_tables(s) for s in _iter_summaries(path)]
+    if not parts:
+        raise SystemExit(f"no sweep summary found under {path!r}")
+    return "\n\n".join(parts)
+
+
 if __name__ == "__main__":
     kind, path = sys.argv[1], sys.argv[2]
-    recs = load(path)
-    print(dryrun_table(recs) if kind == "dryrun" else roofline_table(recs))
+    if kind == "sweep":
+        print(sweep_report(path))
+    else:
+        recs = load(path)
+        print(dryrun_table(recs) if kind == "dryrun"
+              else roofline_table(recs))

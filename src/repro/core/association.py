@@ -7,15 +7,27 @@
 * GCEA — greedy single-criterion benchmark: strongest channel gain.
 * RCEA — random association benchmark.
 
-Two implementations live side by side (DESIGN.md §2.3):
+Three implementations live side by side (DESIGN.md §2.3, §8.1):
 
 * the original numpy ``_resolve`` — kept as the *parity oracle*: small,
-  obviously-correct host code that the property tests check the JAX path
+  obviously-correct host code that the property tests check the JAX paths
   against;
 * ``resolve_jax`` — the same greedy round-robin admission re-expressed as a
-  bounded ``lax.while_loop`` so that association can live *inside* the
-  jitted ``round_step`` with no host callback.  ``POLICIES`` is the
-  registry mapping policy names to JAX preference-matrix builders.
+  bounded ``lax.while_loop`` (one queue pop per accelerator step) so that
+  association can live *inside* the jitted ``round_step`` with no host
+  callback.  Kept behind ``EngineSpec.resolver="serial"`` for A/B;
+* ``resolve_parallel`` — the default: a vectorized quota-round resolver.
+  Each sweep proposes, for ALL edges at once, the per-edge top-ranked
+  unclaimed in-coverage clients and resolves multi-edge conflicts by
+  nearest edge in one masked ``argmin``.  The greedy admission is exactly
+  edge-proposing deferred acceptance (Gale–Shapley with quotas), whose
+  outcome is independent of proposal order once preferences are strict —
+  so the sweep resolver is bit-identical to the serial oracle (proof
+  sketch in DESIGN.md §8.1).  Strictness is what the (distance,
+  edge-index) lexicographic tie-break below buys.
+
+``POLICIES`` is the registry mapping policy names to JAX
+preference-matrix builders.
 """
 from __future__ import annotations
 
@@ -26,6 +38,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import fuzzy
+
+
+def _prefers(dist: np.ndarray, c: int, m: int, other: int) -> bool:
+    """Client c strictly prefers edge m over ``other``: nearest edge wins,
+    exact distance ties break on the lower edge index.  The index tie-break
+    makes client preferences STRICT, which is what guarantees the serial
+    and parallel resolvers compute the same matching (DESIGN.md §8.1);
+    on continuous topologies ties are measure-zero, so this is invisible
+    to the golden trajectories."""
+    return dist[c, m] < dist[c, other] or \
+        (dist[c, m] == dist[c, other] and m < other)
 
 
 def _resolve(order_per_edge: np.ndarray, dist: np.ndarray, quota: int,
@@ -59,7 +82,7 @@ def _resolve(order_per_edge: np.ndarray, dist: np.ndarray, quota: int,
                     progress = True
                     break
                 other = taken[c]
-                if other != m and dist[c, m] < dist[c, other]:
+                if other != m and _prefers(dist, c, m, other):
                     # steal: client prefers the nearer edge; the loser refills
                     taken[c] = m
                     filled[m] += 1
@@ -139,7 +162,11 @@ def resolve_jax(order: jnp.ndarray, dist: jnp.ndarray, quota: int,
         t = taken[c]
         vacant = t < 0
         safe_t = jnp.maximum(t, 0)
-        steal = (~vacant) & (t != m) & (dist[c, m] < dist[c, safe_t])
+        # strict client preference: (distance, edge index) lexicographic —
+        # the same tie-break as the numpy oracle's ``_prefers``
+        nearer = (dist[c, m] < dist[c, safe_t]) | \
+            ((dist[c, m] == dist[c, safe_t]) & (m < t))
+        steal = (~vacant) & (t != m) & nearer
         admit = can_pop & coverage[c, m] & (vacant | steal)
         ptr = ptr.at[m].add(can_pop.astype(ptr.dtype))
         taken = jnp.where(admit, taken.at[c].set(m), taken)
@@ -164,6 +191,87 @@ def resolve_jax(order: jnp.ndarray, dist: jnp.ndarray, quota: int,
             (taken[:, None] >= 0)).astype(jnp.int32)
 
 
+def resolve_parallel(order: jnp.ndarray, dist: jnp.ndarray, quota: int,
+                     coverage: jnp.ndarray) -> jnp.ndarray:
+    """Vectorized quota-round resolver — the default inside ``round_step``.
+
+    One *sweep* plays a whole batch of deferred-acceptance proposals:
+
+    1. every edge proposes to its top ``quota - held`` not-yet-rejected
+       in-coverage clients (per-edge rank threshold, no serial queue);
+    2. every client keeps the best offer among {incumbent ∪ proposals} by
+       the strict (distance, edge-index) order — ONE masked ``argmin``
+       per client (``argmin`` returns the first minimum, which IS the
+       lexicographic tie-break);
+    3. losing offers are rejected permanently (a client's held offer only
+       improves, so a rejected edge can never become acceptable again).
+
+    Each (edge, client) pair is proposed at most once, so ``N·M + 1``
+    sweeps provably suffice; the ``lax.while_loop`` exits at the first
+    proposal-free sweep (a fixed point — the body is idempotent there,
+    which also makes the loop vmap-safe).  Gale–Shapley order-independence
+    makes the result bit-identical to the serial oracle (DESIGN.md §8.1),
+    while the accelerator-step depth drops from O(N²M²) queue pops to the
+    observed handful of sweeps, each a top-k plus a few masked reductions.
+
+    order: (M, N) int — per-edge client indices by descending preference.
+    Returns assoc (N, M) one-hot int32.
+    """
+    m_edges, n_clients = order.shape
+    # rank[m, c] = position of client c in edge m's queue: the inverse
+    # permutation via one scatter (O(N·M)) instead of a second argsort
+    rows = jnp.arange(m_edges, dtype=jnp.int32)[:, None]
+    pos = jnp.broadcast_to(jnp.arange(n_clients, dtype=jnp.int32),
+                           order.shape)
+    rank = jnp.zeros(order.shape, jnp.int32).at[rows, order].set(pos)
+    big = jnp.asarray(n_clients + 1, jnp.int32)
+    col = jnp.arange(m_edges, dtype=jnp.int32)
+    k_top = min(quota, n_clients)
+    max_sweeps = n_clients * m_edges + 2
+
+    def cond(s):
+        _, _, done, it = s
+        return (~done) & (it < max_sweeps)
+
+    def body(s):
+        assigned, rejected, _, it = s
+        held = assigned[None, :] == col[:, None]                  # (M, N)
+        deficit = quota - jnp.sum(held, axis=1)                   # (M,)
+        elig = (~rejected.T) & (~held)                            # (M, N)
+        keys = jnp.where(elig, rank, big)
+        # the deficit-th smallest eligible rank is the proposal cut-off;
+        # ranks are distinct, so exactly min(deficit, #eligible) propose.
+        # deficit ≤ quota, so a top-k of the k = quota best candidates
+        # replaces a full per-edge sort (top_k ties break on the lower
+        # index, but rank keys are unique anyway).
+        kth = big - jax.lax.top_k(big - keys, k_top)[0]           # (M, k)
+        thr_idx = jnp.clip(deficit - 1, 0, k_top - 1)
+        thr = jnp.take_along_axis(kth, thr_idx[:, None], axis=1)[:, 0]
+        propose = elig & (keys <= thr[:, None]) & (deficit > 0)[:, None]
+        # candidates per client: incumbent + incoming proposals
+        cand = propose.T | (assigned[:, None] == col[None, :])    # (N, M)
+        ckey = jnp.where(cand, dist, jnp.inf)
+        best = jnp.argmin(ckey, axis=1).astype(jnp.int32)
+        has = jnp.any(cand, axis=1)
+        assigned = jnp.where(has, best, jnp.asarray(-1, jnp.int32))
+        # everything a client turned down (incl. a bumped incumbent) is
+        # rejected for good — monotone, hence the sweep-count bound
+        rejected = rejected | (cand & (col[None, :] != best[:, None]))
+        return assigned, rejected, ~jnp.any(propose), it + 1
+
+    state = (jnp.full((n_clients,), -1, jnp.int32), ~coverage,
+             jnp.asarray(False), jnp.asarray(0, jnp.int32))
+    taken = jax.lax.while_loop(cond, body, state)[0]
+    return ((taken[:, None] == col[None, :]) &
+            (taken[:, None] >= 0)).astype(jnp.int32)
+
+
+RESOLVERS: Dict[str, Callable[..., jnp.ndarray]] = {
+    "parallel": resolve_parallel,
+    "serial": resolve_jax,
+}
+
+
 # Registry: policy name -> preference-matrix builder (N, M).  ``scores`` may
 # be None for policies that don't use the fuzzy competency.
 PrefBuilder = Callable[..., jnp.ndarray]
@@ -178,15 +286,22 @@ POLICIES: Dict[str, PrefBuilder] = {
 def associate_jax(policy: str, *, scores: jnp.ndarray | None,
                   gains: jnp.ndarray, dist: jnp.ndarray, quota: int,
                   coverage_radius_m: float, key,
-                  avail: jnp.ndarray | None = None) -> jnp.ndarray:
+                  avail: jnp.ndarray | None = None,
+                  resolver: str = "parallel") -> jnp.ndarray:
     """JAX-native association (N, M) one-hot; pure, jit/vmap-safe.
 
     ``avail`` (N,) is the scenario availability mask (DESIGN.md §6): an
     unavailable client is treated as out of every edge's coverage, so no
     policy can admit it and its quota slot goes to the next candidate.
+    ``resolver`` picks the conflict-resolution implementation — both
+    compute the same matching (DESIGN.md §8.1); "serial" is the legacy
+    one-pop-per-step while-loop kept for A/B benchmarking.
     """
     if policy not in POLICIES:
         raise ValueError(f"unknown association policy {policy!r}")
+    if resolver not in RESOLVERS:
+        raise ValueError(f"unknown association resolver {resolver!r}; "
+                         f"choose from {sorted(RESOLVERS)}")
     pref = POLICIES[policy](scores, gains, key)
     if pref.ndim == 1:
         pref = jnp.broadcast_to(pref[:, None], dist.shape)
@@ -195,7 +310,7 @@ def associate_jax(policy: str, *, scores: jnp.ndarray | None,
         coverage = coverage & (avail > 0)[:, None]
     pref = jnp.where(coverage, pref, -jnp.inf)
     order = jnp.argsort(-pref, axis=0).T                       # (M, N)
-    return resolve_jax(order, dist, quota, coverage)
+    return RESOLVERS[resolver](order, dist, quota, coverage)
 
 
 def associate(policy: str, *, scores: np.ndarray, gains_to_edges: np.ndarray,

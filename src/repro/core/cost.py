@@ -40,26 +40,59 @@ def local_compute(cfg, f_hz: jnp.ndarray, n_samples: jnp.ndarray,
     return t_cmp, e_cmp
 
 
+# Below this client count the O(N²) pairwise SIC is cheaper than a sort
+# and — more importantly — is the formulation the golden trajectories were
+# recorded with, so "auto" keeps small problems bit-for-bit stable.
+_SORTED_SIC_MIN_N = 64
+
+
 def uplink(cfg, power_w: jnp.ndarray, gains: jnp.ndarray,
-           assoc: jnp.ndarray, *, noma_enabled: bool = True):
+           assoc: jnp.ndarray, *, noma_enabled: bool = True,
+           sic_impl: str = "auto", sic_max_per_edge: int | None = None):
     """Eqs. 7-10 per edge server: NOMA rates, then t_com / e_com per client.
 
     gains: (N, M) channel |h|² to every edge; assoc: (N, M) one-hot.
     ``noma_enabled=False`` models the OMA benchmark: each edge splits its
     band B equally among its K_m clients (no interference, 1/K_m bandwidth).
+    ``sic_impl`` selects the SIC formulation (all equal up to float
+    summation order): "pairwise" (O(N²M), bit-stable reference),
+    "sorted" (O(NM log N), the at-scale default), "pallas" (the fused
+    ``kernels.hfl_ops.sic_rates`` kernel) or "auto" (sorted from
+    N ≥ 64, pairwise below — bit-identical where goldens are pinned).
+    ``sic_max_per_edge`` is a static per-edge admission bound that lets
+    the sorted path top-k instead of full-sort (the engine passes its
+    quota); it must be ≥ the true per-edge occupancy.
     Returns (t_com (N,), e_com (N,), rates (N,)).
     """
     noise = noma.noise_power_w(cfg.noise_dbm_per_hz, cfg.bandwidth_hz)
 
     if noma_enabled:
-        def per_edge(m):
-            mask = assoc[:, m] > 0
-            return noma.achievable_rates(power_w, gains[:, m],
-                                         bandwidth_hz=cfg.bandwidth_hz,
-                                         noise_w=noise, mask=mask)
+        impl = sic_impl
+        if impl == "auto":
+            impl = ("sorted" if assoc.shape[0] >= _SORTED_SIC_MIN_N
+                    else "pairwise")
+        if impl == "pairwise":
+            def per_edge(m):
+                mask = assoc[:, m] > 0
+                return noma.achievable_rates(power_w, gains[:, m],
+                                             bandwidth_hz=cfg.bandwidth_hz,
+                                             noise_w=noise, mask=mask)
 
-        rates_all = jax.vmap(per_edge)(jnp.arange(assoc.shape[1]))  # (M, N)
-        rates = jnp.sum(rates_all.T * assoc, axis=1)                 # (N,)
+            rates_nm = jax.vmap(per_edge)(
+                jnp.arange(assoc.shape[1])).T                    # (N, M)
+        elif impl == "sorted":
+            rates_nm = noma.sic_rates_matrix(
+                power_w, gains, assoc > 0,
+                bandwidth_hz=cfg.bandwidth_hz, noise_w=noise,
+                max_per_edge=sic_max_per_edge)
+        elif impl == "pallas":
+            from repro.kernels import hfl_ops    # cycle-free lazy import
+            rates_nm = hfl_ops.sic_rates(
+                power_w, gains, assoc > 0,
+                bandwidth_hz=cfg.bandwidth_hz, noise_w=noise)
+        else:
+            raise ValueError(f"unknown sic_impl {sic_impl!r}")
+        rates = jnp.sum(rates_nm * assoc, axis=1)                # (N,)
     else:
         k_m = jnp.maximum(jnp.sum(assoc, axis=0), 1.0)               # (M,)
         share = jnp.sum(assoc / k_m[None, :], axis=1)                # (N,)
@@ -90,11 +123,15 @@ def apply_schedule(cfg, rc: RoundCost, z: jnp.ndarray) -> RoundCost:
 def round_cost(cfg, *, power_w: jnp.ndarray, f_hz: jnp.ndarray,
                gains: jnp.ndarray, assoc: jnp.ndarray, z: jnp.ndarray,
                n_samples: jnp.ndarray, noma_enabled: bool = True,
-               capacitance: jnp.ndarray | None = None) -> RoundCost:
+               capacitance: jnp.ndarray | None = None,
+               sic_impl: str = "auto",
+               sic_max_per_edge: int | None = None) -> RoundCost:
     """Full Eq. 23a cost for one global round."""
     t_cmp, e_cmp = local_compute(cfg, f_hz, n_samples, capacitance)
     t_com, e_com, rates = uplink(cfg, power_w, gains, assoc,
-                                 noma_enabled=noma_enabled)
+                                 noma_enabled=noma_enabled,
+                                 sic_impl=sic_impl,
+                                 sic_max_per_edge=sic_max_per_edge)
     associated = jnp.sum(assoc, axis=1) > 0
     client_time = jnp.where(associated, t_cmp + t_com, 0.0)
     client_energy = jnp.where(associated, e_cmp + e_com, 0.0)

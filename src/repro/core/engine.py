@@ -62,6 +62,18 @@ class EngineSpec:
     # scenarios.TRANSITIONS) — the scenario's numbers live in the
     # ScenarioState arrays, so different parameterisations share a compile.
     scenario: str = "static"
+    # hot-path implementation switches (DESIGN.md §8).  All of them pick
+    # between bit-compatible (resolver) or float-summation-order-compatible
+    # (sic_impl, pallas_score) implementations of the SAME math:
+    # * resolver — "parallel" sweep deferred-acceptance (default) vs the
+    #   legacy "serial" one-pop-per-step while-loop, kept for A/B;
+    # * sic_impl — "auto" (sorted cumulative-interference from N ≥ 64,
+    #   bit-stable pairwise below) | "pairwise" | "sorted" | "pallas";
+    # * pallas_score — route fcea fuzzy scoring through the fused
+    #   kernels.hfl_ops.score_matrix kernel (interpret-mode on CPU).
+    resolver: str = "parallel"
+    sic_impl: str = "auto"
+    pallas_score: bool = False
 
 
 class RoundBundle(NamedTuple):
@@ -224,12 +236,18 @@ def _associate(cfg, spec: EngineSpec, key, gains, dist, counts, stale,
     unavailable clients out of coverage (scenario dropout)."""
     scores = None
     if spec.policy == "fcea":
-        scores = fuzzy.score_matrix(gains, counts, stale,
-                                    data_max=float(cfg.max_samples))
+        if spec.pallas_score:
+            from repro.kernels import hfl_ops    # cycle-free lazy import
+            scores = hfl_ops.score_matrix(gains, counts, stale,
+                                          data_max=float(cfg.max_samples))
+        else:
+            scores = fuzzy.score_matrix(gains, counts, stale,
+                                        data_max=float(cfg.max_samples))
     return association.associate_jax(
         spec.policy, scores=scores, gains=gains, dist=dist,
         quota=quota_for(cfg, spec),
-        coverage_radius_m=coverage_radius(cfg), key=key, avail=avail)
+        coverage_radius_m=coverage_radius(cfg), key=key, avail=avail,
+        resolver=spec.resolver)
 
 
 def _grid_allocate(cfg, spec: EngineSpec, assoc, gains, counts, dist,
@@ -322,13 +340,33 @@ def _schedule(cfg, spec: EngineSpec, rc_all: cost.RoundCost
     return pdd.semi_sync_fastest(rc_all.per_edge_time_s, quota)
 
 
-def _train(cfg, model: MLPClassifier, key, state: RoundState,
-           bundle: RoundBundle, assoc, z) -> Tuple[Params, Params]:
+def _train(cfg, spec: EngineSpec, model: MLPClassifier, key,
+           state: RoundState, bundle: RoundBundle, assoc, z
+           ) -> Tuple[Params, Params]:
     """τ₂ × (τ₁ local SGD + edge aggregation) as a lax.scan, then the
-    semi-synchronous cloud aggregation (Eqs. 11, 17)."""
+    semi-synchronous cloud aggregation (Eqs. 11, 17).
+
+    At most ``quota · M`` clients are ever admitted (a static bound), so
+    when that is smaller than N the local-SGD stage gathers the admitted
+    clients into a fixed-size buffer, trains only them, and scatters the
+    results back — bit-identical to training everyone and discarding the
+    unassociated results (each client's PRNG key and data are its own),
+    but O(quota·M) instead of O(N) model work per edge iteration.  At
+    1024×16 with quota 4 that is 16× less training compute; the golden
+    trajectories pin the small-N case where the bound is inactive.
+    """
     counts = bundle.counts
+    n = cfg.n_clients
     selected = jnp.sum(assoc, axis=1) > 0
     local_fit = _local_sgd(model, cfg.lr, cfg.tau1, cfg.local_batch)
+
+    k_sel = min(n, quota_for(cfg, spec) * cfg.n_edges)
+    if k_sel < n:
+        # admitted-client indices, padded with n (dropped on scatter)
+        sel_idx = jnp.nonzero(selected, size=k_sel, fill_value=n)[0]
+        safe = jnp.minimum(sel_idx, n - 1)
+        sel_x, sel_y = bundle.x[safe], bundle.y[safe]
+        sel_counts = counts[safe]
 
     # associated clients start from the global model
     edge_params = aggregation.replicate(state.global_params, cfg.n_edges)
@@ -338,12 +376,22 @@ def _train(cfg, model: MLPClassifier, key, state: RoundState,
     def edge_iter(carry, k):
         client_p, _ = carry
         ks = jax.random.split(k, cfg.n_clients)
-        trained = local_fit(client_p, bundle.x, bundle.y, counts, ks)
-        # only associated clients actually train (others keep params)
-        client_p = jax.tree.map(
-            lambda new, old: jnp.where(
-                selected.reshape((-1,) + (1,) * (new.ndim - 1)), new, old),
-            trained, client_p)
+        if k_sel < n:
+            gathered = jax.tree.map(lambda l: l[safe], client_p)
+            trained = local_fit(gathered, sel_x, sel_y, sel_counts,
+                                ks[safe])
+            # pad lanes target index n -> dropped; real lanes overwrite
+            client_p = jax.tree.map(
+                lambda old, new: old.at[sel_idx].set(new, mode="drop"),
+                client_p, trained)
+        else:
+            trained = local_fit(client_p, bundle.x, bundle.y, counts, ks)
+            # only associated clients actually train (others keep params)
+            client_p = jax.tree.map(
+                lambda new, old: jnp.where(
+                    selected.reshape((-1,) + (1,) * (new.ndim - 1)),
+                    new, old),
+                trained, client_p)
         edge_p = aggregation.edge_aggregate(client_p, assoc, counts)
         client_p = aggregation.broadcast_to_clients(None, assoc, edge_p,
                                                     client_p)
@@ -426,11 +474,13 @@ def round_step(cfg, spec: EngineSpec, state: RoundState,
                              assoc=assoc, z=jnp.ones((cfg.n_edges,)),
                              n_samples=bundle.counts,
                              noma_enabled=spec.noma_enabled,
-                             capacitance=scen.kappa if dynamic else None)
+                             capacitance=scen.kappa if dynamic else None,
+                             sic_impl=spec.sic_impl,
+                             sic_max_per_edge=quota_for(cfg, spec))
     z = _schedule(cfg, spec, rc_all)
     rc = cost.apply_schedule(cfg, rc_all, z)
     # 5. τ₂·τ₁ training + hierarchical aggregation
-    global_params, client_params = _train(cfg, model, k_train, state,
+    global_params, client_params = _train(cfg, spec, model, k_train, state,
                                           bundle, assoc, z)
     # 6. staleness (Eq. 20): reset only for clients whose edge was selected
     selected = jnp.sum(assoc, axis=1) > 0
@@ -501,6 +551,72 @@ def run_fleet_actors(cfg, spec: EngineSpec, states: RoundState,
     return jax.vmap(
         lambda s, b, a: _scan_rounds(cfg, spec, s, b, n_rounds, a)
     )(states, bundles, actor_params)
+
+
+# ---------------------------------------------------------------------------
+# Fleet-axis sharding (DESIGN.md §8.3): the stacked simulations of a fleet
+# are embarrassingly parallel, so a 1-D device mesh over the LEADING fleet
+# axis scales `run_fleet` across devices with zero cross-device collectives
+# (GSPMD partitions the vmap; every lane's program is untouched).
+# ---------------------------------------------------------------------------
+
+def fleet_mesh(devices=None) -> "jax.sharding.Mesh":
+    """1-D ``("fleet",)`` mesh over ``devices`` (default: all of them).
+    On CPU, spawn placeholder devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=K`` *before* jax
+    imports (see tests/test_fleet_sharding.py)."""
+    devices = jax.devices() if devices is None else list(devices)
+    return jax.sharding.Mesh(np.asarray(devices), ("fleet",))
+
+
+def shard_fleet(tree, mesh: "jax.sharding.Mesh"):
+    """Place a stacked pytree with its leading axis split over the mesh."""
+    sharding = jax.sharding.NamedSharding(
+        mesh, jax.sharding.PartitionSpec("fleet"))
+    return jax.device_put(tree, sharding)
+
+
+def run_fleet_sharded(cfg, spec: EngineSpec, states: RoundState,
+                      bundles: RoundBundle, n_rounds: int,
+                      actor_params: Optional[Params] = None, *,
+                      mesh: "jax.sharding.Mesh | None" = None,
+                      per_sim_actors: bool = False
+                      ) -> Tuple[RoundState, RoundMetrics]:
+    """``run_fleet`` (or ``run_fleet_actors`` when ``per_sim_actors``)
+    with the fleet axis sharded over ``mesh`` (default: all devices).
+
+    A fleet whose size is not a multiple of the device count is padded by
+    replicating the last simulation (the pad lanes compute and are then
+    sliced off — wasted work only on the ragged remainder).  Per-lane
+    results are identical to the unsharded drivers: partitioning an
+    embarrassingly-parallel vmap axis changes placement, not math
+    (asserted by the multi-device parity test)."""
+    mesh = fleet_mesh() if mesh is None else mesh
+    n_dev = int(mesh.devices.size)
+    fleet = jax.tree.leaves(states)[0].shape[0]
+    pad = (-fleet) % n_dev
+
+    def _pad(leaf):
+        reps = jnp.repeat(leaf[-1:], pad, axis=0)
+        return jnp.concatenate([leaf, reps], axis=0)
+
+    if pad:
+        states = jax.tree.map(_pad, states)
+        bundles = jax.tree.map(_pad, bundles)
+        if per_sim_actors:
+            actor_params = jax.tree.map(_pad, actor_params)
+    states, bundles = shard_fleet((states, bundles), mesh)
+    if per_sim_actors:
+        actor_params = shard_fleet(actor_params, mesh)
+        out, ms = run_fleet_actors(cfg, spec, states, bundles, n_rounds,
+                                   actor_params)
+    else:
+        out, ms = run_fleet(cfg, spec, states, bundles, n_rounds,
+                            actor_params)
+    if pad:
+        out = jax.tree.map(lambda l: l[:fleet], out)
+        ms = jax.tree.map(lambda l: l[:fleet], ms)
+    return out, ms
 
 
 def metrics_row(metrics: RoundMetrics, i: Optional[int] = None):

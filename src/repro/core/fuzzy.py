@@ -110,16 +110,16 @@ def fuzzy_score(cq: jnp.ndarray, dq: jnp.ndarray, ms: jnp.ndarray
 fuzzy_scores = jax.jit(jax.vmap(fuzzy_score))
 
 
-def score_matrix(gains: jnp.ndarray, counts: jnp.ndarray,
-                 staleness: jnp.ndarray, *, data_max: float) -> jnp.ndarray:
-    """(N, M) competency matrix, fully inside JAX (no host round-trips).
+def normalized_inputs(gains: jnp.ndarray, counts: jnp.ndarray,
+                      staleness: jnp.ndarray, *, data_max: float):
+    """The Eq. 21 normalisation stage shared by the jnp ``score_matrix``
+    and the Pallas kernel (``kernels.hfl_ops.score_matrix``): returns
+    (cq (N, M), dq (N,), ms (N,)) in [0, 100].
 
-    CQ is the per-edge channel quality normalised in dB (Eq. 21 on
-    log-gain): raw |h|² spans four decades of path loss, so a linear V/MV
-    map collapses all but the nearest clients to 0 — the dB scale is what
-    'channel quality' means in practice.  DQ and MS are shared across
-    edges.  This is the jittable replacement for the per-edge host loop
-    the eager simulation used to run (DESIGN.md §2).
+    CQ is the per-edge channel quality normalised in dB: raw |h|² spans
+    four decades of path loss, so a linear V/MV map collapses all but the
+    nearest clients to 0 — the dB scale is what 'channel quality' means
+    in practice.  DQ and MS are shared across edges.
     """
     db = 10.0 * jnp.log10(jnp.maximum(gains, 1e-30))
     lo, hi = jnp.min(db), jnp.max(db)
@@ -127,6 +127,19 @@ def score_matrix(gains: jnp.ndarray, counts: jnp.ndarray,
     dq = normalize(counts.astype(jnp.float32), data_max)          # (N,)
     ms = normalize(staleness.astype(jnp.float32),
                    jnp.maximum(jnp.max(staleness), 1).astype(jnp.float32))
+    return cq, dq, ms
+
+
+def score_matrix(gains: jnp.ndarray, counts: jnp.ndarray,
+                 staleness: jnp.ndarray, *, data_max: float) -> jnp.ndarray:
+    """(N, M) competency matrix, fully inside JAX (no host round-trips).
+
+    This is the jittable replacement for the per-edge host loop the eager
+    simulation used to run (DESIGN.md §2); the Pallas-fused variant lives
+    in ``kernels.hfl_ops`` behind ``EngineSpec.pallas_score``.
+    """
+    cq, dq, ms = normalized_inputs(gains, counts, staleness,
+                                   data_max=data_max)
     per_edge = jax.vmap(fuzzy_scores, in_axes=(1, None, None), out_axes=1)
     return per_edge(cq, dq, ms)
 

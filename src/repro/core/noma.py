@@ -64,6 +64,53 @@ def achievable_rates(power_w: jnp.ndarray, gain: jnp.ndarray, *,
     return bandwidth_hz * jnp.log2(1.0 + sinr)
 
 
+def sic_rates_matrix(power_w: jnp.ndarray, gains: jnp.ndarray,
+                     mask: jnp.ndarray, *, bandwidth_hz: float,
+                     noise_w: float,
+                     max_per_edge: int | None = None) -> jnp.ndarray:
+    """All M edges' SIC rates in one shot: (N,) power, (N, M) gains/mask
+    -> (N, M) rates (masked entries zero).
+
+    The sorted cumulative-interference formulation of Eqs. 7-8: per edge,
+    decode in descending received power (stable sort, so exact-power ties
+    break on the lower client index — the same order as ``sic_sinr``'s
+    pairwise tie-break) and read each client's interference off a reversed
+    cumulative sum.  O(N log N) per edge instead of the pairwise O(N²),
+    and ONE program for all edges — this is what lets ``cost.uplink``
+    scale past ~10³ clients, where the pairwise form would materialise an
+    (N, N) block per edge (2 GB of temps at 4096×32).  Equal to the
+    pairwise form up to float summation order (parity-tested).
+
+    ``max_per_edge``: a STATIC upper bound on the number of unmasked
+    clients per edge (the engine passes its admission quota).  When
+    given, a ``lax.top_k`` of that many candidates replaces the full-N
+    sort — the masked-out majority carries zero received power and
+    neither interferes nor rates, so only the bound must be honest
+    (a tighter decode set would silently drop interferers).
+    """
+    rx = jnp.where(mask, power_w[:, None] * gains, 0.0)          # (N, M)
+    if max_per_edge is not None and max_per_edge < rx.shape[0]:
+        k = max_per_edge
+        srx, sidx = jax.lax.top_k(rx.T, k)                       # (M, k)
+        csum = jnp.cumsum(srx, axis=1)
+        interference = jnp.maximum(csum[:, -1:] - csum, 0.0)
+        sinr = srx / (interference + noise_w)
+        rate = bandwidth_hz * jnp.log2(1.0 + sinr)               # (M, k)
+        m_edges = rx.shape[1]
+        out = jnp.zeros((m_edges, rx.shape[0]), rate.dtype)
+        out = out.at[jnp.arange(m_edges)[:, None], sidx].set(rate)
+        return jnp.where(mask, out.T, 0.0)
+    order = jnp.argsort(-rx, axis=0)          # stable: ties by client index
+    srx = jnp.take_along_axis(rx, order, axis=0)
+    csum = jnp.cumsum(srx, axis=0)
+    # interference = received power decoded after me (strictly weaker)
+    interference = jnp.maximum(csum[-1:] - csum, 0.0)
+    sinr = srx / (interference + noise_w)
+    rate = bandwidth_hz * jnp.log2(1.0 + sinr)
+    inv = jnp.argsort(order, axis=0)
+    return jnp.where(mask, jnp.take_along_axis(rate, inv, axis=0), 0.0)
+
+
 def noise_power_w(noise_dbm_per_hz: float, bandwidth_hz: float) -> float:
     """AWGN power over the band: σ² = N0 · B."""
     return 10.0 ** (noise_dbm_per_hz / 10.0) / 1000.0 * bandwidth_hz

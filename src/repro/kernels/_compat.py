@@ -1,0 +1,9 @@
+"""Version shims for jax.experimental.pallas across the jax versions this
+repo meets (the container pins jax 0.4.x; TPU targets run newer)."""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+# jax<0.5 spells it TPUCompilerParams; keep both working.
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")

@@ -124,11 +124,15 @@ def _group_cells(cells: Sequence[SweepCell]
 
 
 def run_sweep(cfg, grid: SweepGrid, *, out_dir: str = "results",
-              write_json: bool = True, actor_params=None) -> Dict[str, Any]:
+              write_json: bool = True, actor_params=None,
+              mesh=None) -> Dict[str, Any]:
     """Execute the grid; returns (and persists) a summary + per-cell rows.
 
     One ``run_fleet`` call — hence one compile — per static-spec group;
     inside a group all scenarios × seeds run vmapped in a single program.
+    Pass ``mesh`` (e.g. ``engine.fleet_mesh()``) to shard every group's
+    fleet axis across devices (DESIGN.md §8.3) — per-cell results are
+    identical to the unsharded run, only placement changes.
 
     ``allocator="ddpg"`` cells need a trained actor.  By default every
     ddpg CELL trains its own actor on its own world (scenario × seed) via
@@ -195,7 +199,12 @@ def run_sweep(cfg, grid: SweepGrid, *, out_dir: str = "results",
             cell_actors = jax.block_until_ready(agents.actor)
             train_s = time.perf_counter() - t0
         t0 = time.perf_counter()
-        if cell_actors is not None:
+        if mesh is not None:
+            _, ms = engine.run_fleet_sharded(
+                cfg, spec, states, bundles, grid.n_rounds,
+                cell_actors if cell_actors is not None else actor_params,
+                mesh=mesh, per_sim_actors=cell_actors is not None)
+        elif cell_actors is not None:
             _, ms = engine.run_fleet_actors(cfg, spec, states, bundles,
                                             grid.n_rounds, cell_actors)
         else:
@@ -269,6 +278,8 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--out", default="results")
+    ap.add_argument("--sharded", action="store_true",
+                    help="shard each group's fleet axis over all devices")
     args = ap.parse_args(argv)
 
     cfg = dc.replace(CONFIG, n_clients=32, n_edges=4, min_samples=60,
@@ -280,7 +291,8 @@ def main(argv=None) -> None:
         policies=("fcea", "gcea"),
         seeds=(0,) if args.quick else (0, 1),
         n_rounds=3 if args.quick else 10)
-    summary = run_sweep(cfg, grid, out_dir=args.out)
+    summary = run_sweep(cfg, grid, out_dir=args.out,
+                        mesh=engine.fleet_mesh() if args.sharded else None)
     print(json.dumps({k: summary[k] for k in
                       ("name", "n_cells", "n_compiles", "groups")}, indent=1))
     for cid, row in summary["final"].items():

@@ -1,4 +1,10 @@
-"""Client-edge association policy tests (paper §III-B last paragraph)."""
+"""Client-edge association policy tests (paper §III-B last paragraph),
+including oracle-vs-JAX parity for BOTH resolvers (the legacy serial
+while-loop and the parallel sweep resolver, DESIGN.md §8.1) on the
+degenerate corners: quota ≥ N, quota·M > N, zero-coverage clients and
+all-edges-conflict preference/distance ties."""
+import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 from _hyp import given, settings, st  # hypothesis or its absent-shim
@@ -76,3 +82,113 @@ def test_per_edge_scores_matrix_accepted():
     scores2d = rng.uniform(0.0, 100.0, dist.shape)
     assoc = association.fcea(scores2d, dist, quota=2, coverage_radius_m=500.0)
     assert assoc.shape == dist.shape
+
+
+# ---------------------------------------------------------------------------
+# Oracle-vs-JAX resolver parity (both implementations, degenerate corners)
+# ---------------------------------------------------------------------------
+
+def _both_resolvers(order, dist, quota, cov):
+    want = association._resolve(order, dist, quota, cov)
+    for name, fn in association.RESOLVERS.items():
+        got = np.asarray(fn(jnp.asarray(order), jnp.asarray(dist), quota,
+                            jnp.asarray(cov)))
+        np.testing.assert_array_equal(got, want, err_msg=name)
+    return want
+
+
+def _order_from(pref, cov):
+    return np.argsort(-np.where(cov, pref, -np.inf), axis=0,
+                      kind="stable").T
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 24), st.integers(1, 5), st.integers(1, 30),
+       st.integers(0, 10_000))
+def test_resolvers_match_oracle_random(n, m, quota, seed):
+    """Property parity on randomized topologies, quota up to ≫ N."""
+    rng = np.random.default_rng(seed)
+    dist = rng.uniform(10.0, 400.0, (n, m)).astype(np.float32)
+    pref = rng.uniform(0.0, 100.0, (n, m)).astype(np.float32)
+    cov = dist <= rng.uniform(100.0, 400.0)
+    assoc = _both_resolvers(_order_from(pref, cov), dist, quota, cov)
+    assert (assoc.sum(axis=1) <= 1).all()
+    assert (assoc.sum(axis=0) <= quota).all()
+
+
+def test_quota_at_least_n_admits_every_covered_client():
+    """quota ≥ N: every in-coverage client lands somewhere."""
+    rng = np.random.default_rng(1)
+    n, m = 10, 3
+    dist = rng.uniform(10.0, 300.0, (n, m)).astype(np.float32)
+    pref = rng.uniform(0.0, 100.0, (n, m)).astype(np.float32)
+    cov = np.ones((n, m), bool)
+    assoc = _both_resolvers(_order_from(pref, cov), dist, n + 5, cov)
+    assert assoc.sum() == n
+    # with every edge's quota open, each client gets its NEAREST edge
+    np.testing.assert_array_equal(np.argmax(assoc, axis=1),
+                                  np.argmin(dist, axis=1))
+
+
+def test_total_quota_exceeds_n():
+    """quota·M > N but quota < N: all covered clients admitted."""
+    rng = np.random.default_rng(2)
+    n, m, quota = 9, 4, 3                   # 12 slots for 9 clients
+    dist = rng.uniform(10.0, 300.0, (n, m)).astype(np.float32)
+    pref = rng.uniform(0.0, 100.0, (n, m)).astype(np.float32)
+    cov = np.ones((n, m), bool)
+    assoc = _both_resolvers(_order_from(pref, cov), dist, quota, cov)
+    assert assoc.sum() == n
+
+
+def test_zero_coverage_client_never_admitted():
+    rng = np.random.default_rng(3)
+    n, m = 8, 2
+    dist = rng.uniform(10.0, 300.0, (n, m)).astype(np.float32)
+    pref = rng.uniform(0.0, 100.0, (n, m)).astype(np.float32)
+    cov = np.ones((n, m), bool)
+    cov[3] = False                          # client 3 sees no edge at all
+    assoc = _both_resolvers(_order_from(pref, cov), dist, 4, cov)
+    assert assoc[3].sum() == 0
+
+
+def test_all_clients_conflict_with_ties():
+    """Every edge ranks clients identically AND distances tie exactly:
+    the (distance, edge-index) tie-break keeps serial == parallel ==
+    oracle bit-for-bit."""
+    n, m, quota = 6, 3, 2
+    pref = np.broadcast_to(
+        np.asarray([5., 4., 3., 2., 1., 0.], np.float32)[:, None],
+        (n, m)).copy()                      # all edges want client 0 first
+    dist = np.full((n, m), 100.0, np.float32)      # every distance ties
+    cov = np.ones((n, m), bool)
+    assoc = _both_resolvers(_order_from(pref, cov), dist, quota, cov)
+    assert assoc.sum() == n                 # quota·M = N: everyone admitted
+    # ties resolve to the lowest edge index in preference order
+    np.testing.assert_array_equal(np.argmax(assoc, axis=1),
+                                  [0, 0, 1, 1, 2, 2])
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 16), st.integers(2, 4), st.integers(1, 4),
+       st.integers(0, 10_000))
+def test_resolvers_match_oracle_under_ties(n, m, quota, seed):
+    """Property parity on tie-heavy worlds: quantised distances and
+    shared preference vectors force constant multi-edge conflicts."""
+    rng = np.random.default_rng(seed)
+    dist = rng.choice([50.0, 100.0, 150.0], (n, m)).astype(np.float32)
+    pref = np.broadcast_to(
+        rng.permutation(n).astype(np.float32)[:, None], (n, m)).copy()
+    cov = rng.random((n, m)) < 0.8
+    _both_resolvers(_order_from(pref, cov), dist, quota, cov)
+
+
+def test_resolver_registry_and_unknown_name():
+    assert set(association.RESOLVERS) == {"parallel", "serial"}
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError, match="resolver"):
+        association.associate_jax(
+            "gcea", scores=None, gains=jnp.ones((4, 2)) * 1e-9,
+            dist=jnp.asarray(rng.uniform(10, 300, (4, 2))), quota=1,
+            coverage_radius_m=500.0, key=jax.random.key(0),
+            resolver="bogus")

@@ -19,12 +19,12 @@ SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import get_config
 from repro.models import build_model
+from repro.launch.mesh import _make_mesh    # AxisType-compat shim
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(AxisType.Auto,) * 2)
+mesh = _make_mesh((2, 4), ("data", "model"))
 cfg = get_config("yi-34b").reduced()          # attn_seq_shard=True inherited
 assert cfg.attn_seq_shard
 model = build_model(cfg)

@@ -1,0 +1,98 @@
+"""Fleet-axis sharding (DESIGN.md §8.3): ``run_fleet_sharded`` and the
+sharded sweep runner must reproduce the unsharded results exactly, with
+the fleet axis genuinely split across devices.
+
+The multi-device cases run in a SUBPROCESS: the placeholder-device
+``XLA_FLAGS`` must be set before jax imports and must not leak into this
+test process (same pattern as test_dryrun_subprocess.py).
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+
+from repro.configs.hfl_mnist import CONFIG
+from repro.core import engine
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+SMALL = dataclasses.replace(CONFIG, n_clients=16, n_edges=2,
+                            clients_per_edge=3, min_samples=60,
+                            max_samples=120, hidden=32, input_dim=64)
+
+
+def test_single_device_sharded_matches_plain():
+    """On the 1-device default mesh the sharded driver is a pass-through."""
+    spec = engine.EngineSpec(policy="gcea", scheduler="fastest")
+    pairs = [engine.init_simulation(SMALL, seed=s)[:2] for s in range(3)]
+    states, bundles = engine.stack_fleet(pairs)
+    _, plain = engine.run_fleet(SMALL, spec, states, bundles, 2)
+    _, sharded = engine.run_fleet_sharded(SMALL, spec, states, bundles, 2)
+    for field in ("loss", "cost", "accuracy"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(plain, field)),
+            np.asarray(getattr(sharded, field)), err_msg=field)
+
+
+def test_fleet_mesh_shape():
+    mesh = engine.fleet_mesh()
+    assert mesh.axis_names == ("fleet",)
+    assert int(mesh.devices.size) == len(jax.devices())
+
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import dataclasses
+import numpy as np
+import jax
+from repro.configs.hfl_mnist import CONFIG
+from repro.core import engine
+from repro import sweeps
+
+assert len(jax.devices()) == 4
+SMALL = dataclasses.replace(CONFIG, n_clients=16, n_edges=2,
+                            clients_per_edge=3, min_samples=60,
+                            max_samples=120, hidden=32, input_dim=64)
+spec = engine.EngineSpec(policy="gcea", scheduler="fastest")
+
+# 6 seeds on 4 devices: exercises the ragged-fleet padding path too
+pairs = [engine.init_simulation(SMALL, seed=s)[:2] for s in range(6)]
+states, bundles = engine.stack_fleet(pairs)
+_, plain = engine.run_fleet(SMALL, spec, states, bundles, 2)
+_, sharded = engine.run_fleet_sharded(SMALL, spec, states, bundles, 2)
+for f in ("loss", "cost", "accuracy"):
+    np.testing.assert_allclose(np.asarray(getattr(plain, f)),
+                               np.asarray(getattr(sharded, f)),
+                               rtol=1e-6, err_msg=f)
+np.testing.assert_array_equal(np.asarray(plain.z), np.asarray(sharded.z))
+print("FLEET_OK")
+
+# sharded sweep == unsharded sweep, per cell
+grid = sweeps.SweepGrid(name="shardtest",
+                        scenarios=("static", "markov_dropout"),
+                        policies=("gcea",), schedulers=("fastest",),
+                        seeds=(0, 1), n_rounds=2)
+plain = sweeps.run_sweep(SMALL, grid, write_json=False)
+sharded = sweeps.run_sweep(SMALL, grid, write_json=False,
+                           mesh=engine.fleet_mesh())
+assert plain["cells"].keys() == sharded["cells"].keys()
+for cid in plain["cells"]:
+    for k in plain["cells"][cid]:
+        np.testing.assert_allclose(np.asarray(plain["cells"][cid][k]),
+                                   np.asarray(sharded["cells"][cid][k]),
+                                   rtol=1e-6, err_msg=f"{cid}:{k}")
+print("SWEEP_OK")
+"""
+
+
+def test_multi_device_fleet_and_sweep_parity():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "FLEET_OK" in out.stdout and "SWEEP_OK" in out.stdout

@@ -4,7 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import ops, ref
+from repro.core import fuzzy, noma
+from repro.kernels import hfl_ops, ops, ref
 from repro.kernels.flash_attention import flash_attention as fa_raw
 from repro.kernels.linear_recurrence import linear_recurrence as lr_raw
 
@@ -109,6 +110,93 @@ def test_linear_recurrence_matches_rglru_scan(key):
     want = rglru_scan(log_a, x)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5,
                                rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# HFL kernels (DESIGN.md §8.2) vs their jnp references, interpret mode
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,m,block_r", [
+    (10, 3, 8),       # padded ragged tail
+    (64, 8, 512),     # block larger than the row count
+    (33, 5, 32),
+    (128, 4, 128),
+])
+def test_hfl_score_matrix_matches_fuzzy(n, m, block_r):
+    rng = np.random.default_rng(n * m)
+    gains = jnp.asarray(rng.uniform(1e-12, 1e-8, (n, m)))
+    counts = jnp.asarray(rng.integers(60, 120, n), jnp.float32)
+    stale = jnp.asarray(rng.integers(1, 9, n), jnp.int32)
+    want = fuzzy.score_matrix(gains, counts, stale, data_max=120.0)
+    got = hfl_ops.score_matrix(gains, counts, stale, data_max=120.0,
+                               block_r=block_r, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-4, rtol=1e-5)
+
+
+def _pairwise_rates(p, g, mask, bandwidth_hz, noise_w):
+    return np.stack(
+        [np.asarray(noma.achievable_rates(p, g[:, j],
+                                          bandwidth_hz=bandwidth_hz,
+                                          noise_w=noise_w, mask=mask[:, j]))
+         for j in range(g.shape[1])], axis=1)
+
+
+@pytest.mark.parametrize("n,m,block_n", [
+    (12, 3, 8),       # ragged blocks
+    (64, 4, 32),      # multi-block j sweep
+    (100, 7, 64),
+])
+def test_hfl_sic_rates_matches_pairwise(n, m, block_n):
+    rng = np.random.default_rng(n + m)
+    p = jnp.asarray(rng.uniform(0.01, 0.1, n))
+    g = jnp.asarray(rng.uniform(0.1, 10.0, (n, m)) * 1e-9)
+    mask = jnp.asarray(rng.random((n, m)) < 0.5)
+    noise = noma.noise_power_w(-174.0, 1e6)
+    want = _pairwise_rates(p, g, mask, 1e6, noise)
+    got = hfl_ops.sic_rates(p, g, mask, bandwidth_hz=1e6, noise_w=noise,
+                            block_n=block_n, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5,
+                               atol=want.max() * 1e-6)
+
+
+def test_sorted_sic_matrix_matches_pairwise():
+    """The jnp sorted-cumsum path (the at-scale default inside
+    ``cost.uplink``) against the pairwise oracle, with and without the
+    ``max_per_edge`` top-k bound."""
+    rng = np.random.default_rng(5)
+    n, m, quota = 80, 5, 6
+    p = jnp.asarray(rng.uniform(0.01, 0.1, n))
+    g = jnp.asarray(rng.uniform(0.1, 10.0, (n, m)) * 1e-9)
+    mask_np = np.zeros((n, m), bool)
+    for j in range(m):
+        mask_np[rng.choice(n, quota, replace=False), j] = True
+    mask = jnp.asarray(mask_np)
+    noise = noma.noise_power_w(-174.0, 1e6)
+    want = _pairwise_rates(p, g, mask, 1e6, noise)
+    full = noma.sic_rates_matrix(p, g, mask, bandwidth_hz=1e6,
+                                 noise_w=noise)
+    topk = noma.sic_rates_matrix(p, g, mask, bandwidth_hz=1e6,
+                                 noise_w=noise, max_per_edge=quota)
+    np.testing.assert_allclose(np.asarray(full), want, rtol=1e-5,
+                               atol=want.max() * 1e-6)
+    # the top-k path IS the sorted path on the nonzero prefix: bit-equal
+    np.testing.assert_array_equal(np.asarray(full), np.asarray(topk))
+
+
+def test_sorted_sic_tie_break_matches_pairwise():
+    """Exactly equal received powers: both formulations must decode the
+    lower client index first."""
+    p = jnp.asarray([0.1, 0.1, 0.1])
+    g = jnp.asarray([[1e-9], [1e-9], [2e-9]])
+    mask = jnp.ones((3, 1), bool)
+    noise = noma.noise_power_w(-174.0, 1e6)
+    want = _pairwise_rates(p, g, mask, 1e6, noise)
+    got = noma.sic_rates_matrix(p, g, mask, bandwidth_hz=1e6, noise_w=noise)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-6)
+    # client 0 (earlier index) decoded before its equal-power twin 1 ->
+    # still sees 1's interference (Eq. 7) -> strictly lower rate
+    assert float(got[0, 0]) < float(got[1, 0])
 
 
 def test_flash_attention_grads(key):

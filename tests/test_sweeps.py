@@ -177,6 +177,27 @@ def test_duplicate_scenario_labels_rejected():
         sweeps.expand_grid(_grid(scenarios=(spec_a, spec_b)))
 
 
+def test_render_tables_sweep_mode(tmp_path):
+    """results/render_tables.py renders a run_sweep summary.json into the
+    Figs. 8-12 cost/accuracy markdown tables."""
+    import importlib.util
+    grid = _grid(scenarios=("static", "markov_dropout"), policies=("gcea",),
+                 schedulers=("fastest",), seeds=(0, 1))
+    sweeps.run_sweep(SMALL, grid, out_dir=str(tmp_path))
+    path = os.path.join(os.path.dirname(__file__), "..", "results",
+                        "render_tables.py")
+    spec = importlib.util.spec_from_file_location("render_tables", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    report = mod.sweep_report(os.path.join(str(tmp_path), "sweep_t"))
+    assert "Final accuracy" in report
+    assert "Mean round cost" in report
+    assert "gcea/mid/fastest/noma" in report
+    # one row per scenario, mean ± std over the two seeds
+    assert "| static |" in report and "| markov_dropout |" in report
+    assert "±" in report
+
+
 def test_same_seed_same_data_across_scenarios():
     """Scenario draws happen after topology+data: the federation is
     identical under every scenario, so sweep columns are comparable."""
