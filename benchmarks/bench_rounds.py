@@ -18,6 +18,14 @@ sic_impl="pairwise")``) — the A/B for the PR-4 hot-path work — and a
 per-stage breakdown (associate / allocate / schedule / train / eval, each
 jitted separately, best-of-k) so a regression is attributable to a stage.
 
+At the scaling-tail sizes a K-SWEEP column compares the dense (N, M)
+round against the (N, K) candidate frontier (``EngineSpec.candidates_k``,
+DESIGN.md §9) for K ∈ {4, 8}, per-stage breakdowns included — the A/B for
+the PR-5 candidate-set refactor.  8192×32 exists only because of that
+refactor: the dense resolver still runs there but materially slower (its
+sweeps drag (N, M) tensors and an (M, N) rank scatter through every
+while_loop step).
+
 The model/data are kept small so the numbers measure the ROUND pipeline,
 not the MLP.  Writes BENCH_rounds.json at the repo root so the perf
 trajectory is tracked across PRs.
@@ -49,6 +57,10 @@ OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_rounds.json")
 SIZES = ((64, 4), (256, 8), (1024, 16))
 # scanned/fleet-only scaling tail: the eager baseline cannot run here
 SCALE_SIZES = ((2048, 32), (4096, 32))
+# candidate-frontier K-sweep sizes (dense column = the regular entry);
+# 8192×32 runs candidate-only drivers next to a dense A/B that the PR-4
+# resolver handles materially slower
+K_SWEEP = {(4096, 32): (4, 8), (8192, 32): (4, 8)}
 # gcea + fastest is the fully host-callback-free acceptance path.
 SPEC = engine.EngineSpec(policy="gcea", scheduler="fastest")
 # the legacy hot path (PR-1..3): serial while-loop resolver, pairwise SIC
@@ -166,31 +178,45 @@ def _best_ms(fn, *args, repeats: int = 5) -> float:
     return best * 1e3
 
 
-def stage_breakdown(cfg, state, bundle) -> Dict[str, float]:
+def stage_breakdown(cfg, state, bundle, spec=SPEC) -> Dict[str, float]:
     """Per-stage ms for one round's pieces, each jitted separately on the
-    init state — the attribution view behind the scanned rounds/sec."""
-    model = MLPClassifier(cfg.input_dim, cfg.hidden, cfg.n_classes)
-    _, _, _, k_assoc, k_alloc, k_train = engine.round_keys(SPEC, state.key)
+    init state — the attribution view behind the scanned rounds/sec.
 
-    f_assoc = jax.jit(lambda g, s: engine._associate(
-        cfg, SPEC, k_assoc, g, bundle.dist, bundle.counts, s))
-    assoc = f_assoc(state.gains, state.staleness).astype(jnp.float32)
+    With ``spec.candidates_k`` set, the associate stage includes the
+    per-round candidate build and the schedule stage bills through the
+    compact ``assigned`` path, mirroring ``round_step`` exactly."""
+    model = MLPClassifier(cfg.input_dim, cfg.hidden, cfg.n_classes)
+    _, _, _, k_assoc, k_alloc, k_train = engine.round_keys(spec, state.key)
+    compact = spec.candidates_k is not None
+
+    def _assoc(g, s):
+        cand = engine._build_candidates(cfg, spec, bundle.dist, None)
+        out = engine._associate(cfg, spec, k_assoc, g, bundle.dist,
+                                bundle.counts, s, None, cand)
+        if compact:     # assigned (N,) + the one-hot view round_step builds
+            from repro.core import candidates
+            return out, candidates.assigned_one_hot(
+                out, cfg.n_edges).astype(jnp.float32)
+        return None, out.astype(jnp.float32)
+
+    f_assoc = jax.jit(_assoc)
+    assigned, assoc = f_assoc(state.gains, state.staleness)
     f_alloc = jax.jit(lambda a, g: engine._allocate(
-        cfg, SPEC, k_alloc, a, g, bundle.counts, None, None, bundle.dist))
+        cfg, spec, k_alloc, a, g, bundle.counts, None, None, bundle.dist))
     p, f = f_alloc(assoc, state.gains)
 
-    def _sched(p_, f_, g_, a_):
+    def _sched(p_, f_, g_, a_, asg_):
         rc_all = cost.round_cost(
             cfg, power_w=p_, f_hz=f_, gains=g_, assoc=a_,
             z=jnp.ones((cfg.n_edges,)), n_samples=bundle.counts,
-            noma_enabled=SPEC.noma_enabled, sic_impl=SPEC.sic_impl,
-            sic_max_per_edge=engine.quota_for(cfg, SPEC))
-        z = engine._schedule(cfg, SPEC, rc_all)
+            noma_enabled=spec.noma_enabled, sic_impl=spec.sic_impl,
+            sic_max_per_edge=engine.quota_for(cfg, spec), assigned=asg_)
+        z = engine._schedule(cfg, spec, rc_all)
         return cost.apply_schedule(cfg, rc_all, z)
 
     f_sched = jax.jit(_sched)
     z1 = jnp.ones((cfg.n_edges,))
-    f_train = jax.jit(lambda st, a: engine._train(cfg, SPEC, model, k_train,
+    f_train = jax.jit(lambda st, a: engine._train(cfg, spec, model, k_train,
                                                   st, bundle, a, z1))
     f_eval = jax.jit(lambda gp: (model.accuracy(gp, bundle.test_x,
                                                 bundle.test_y),
@@ -200,15 +226,16 @@ def stage_breakdown(cfg, state, bundle) -> Dict[str, float]:
         "associate_ms": round(_best_ms(f_assoc, state.gains,
                                        state.staleness), 3),
         "allocate_ms": round(_best_ms(f_alloc, assoc, state.gains), 3),
-        "schedule_ms": round(_best_ms(f_sched, p, f, state.gains, assoc), 3),
+        "schedule_ms": round(_best_ms(f_sched, p, f, state.gains, assoc,
+                                      assigned), 3),
         "train_ms": round(_best_ms(f_train, state, assoc), 3),
         "eval_ms": round(_best_ms(f_eval, state.global_params), 3),
     }
 
 
 def bench_size(n: int, m: int, *, eager_rounds: int, scan_rounds: int,
-               fleet_seeds: int, with_eager: bool = True
-               ) -> Dict[str, float]:
+               fleet_seeds: int, with_eager: bool = True,
+               with_fleet: bool = True) -> Dict[str, float]:
     cfg = _cfg(n, m)
     state, bundle, aux = engine.init_simulation(cfg, seed=0)
     out: Dict[str, float] = {}
@@ -245,20 +272,35 @@ def bench_size(n: int, m: int, *, eager_rounds: int, scan_rounds: int,
                                        scan_rounds), scan_rounds), 3)
 
     # -- fleet: vmap the scanned program over independent seeds --------------
-    pairs = [engine.init_simulation(cfg, seed=s)[:2]
-             for s in range(fleet_seeds)]
-    states, bundles = engine.stack_fleet(pairs)
-    fleet_rps = median_rps(
-        lambda: engine.run_fleet(cfg, SPEC, states, bundles, scan_rounds),
-        fleet_seeds * scan_rounds)
-    out["fleet_rps"] = round(fleet_rps, 3)
+    if with_fleet:
+        pairs = [engine.init_simulation(cfg, seed=s)[:2]
+                 for s in range(fleet_seeds)]
+        states, bundles = engine.stack_fleet(pairs)
+        fleet_rps = median_rps(
+            lambda: engine.run_fleet(cfg, SPEC, states, bundles,
+                                     scan_rounds),
+            fleet_seeds * scan_rounds)
+        out["fleet_rps"] = round(fleet_rps, 3)
 
     if with_eager:
         out["scan_speedup"] = round(scanned_rps / out["eager_rps"], 2)
-        out["fleet_speedup"] = round(fleet_rps / out["eager_rps"], 2)
+        if with_fleet:
+            out["fleet_speedup"] = round(out["fleet_rps"]
+                                         / out["eager_rps"], 2)
     out.update(eager_rounds=eager_rounds if with_eager else 0,
-               scan_rounds=scan_rounds, fleet_seeds=fleet_seeds,
+               scan_rounds=scan_rounds,
+               fleet_seeds=fleet_seeds if with_fleet else 0,
                stages=stage_breakdown(cfg, state, bundle))
+
+    # -- candidate-frontier K-sweep vs the dense column above ----------------
+    for k in K_SWEEP.get((n, m), ()):
+        spec_k = dataclasses.replace(SPEC, candidates_k=k)
+        out.setdefault("candidates", {})[f"k{k}"] = {
+            "scanned_rps": round(median_rps(
+                lambda: engine.run_scanned(cfg, spec_k, state, bundle,
+                                           scan_rounds), scan_rounds), 3),
+            "stages": stage_breakdown(cfg, state, bundle, spec_k),
+        }
     return out
 
 
@@ -271,17 +313,24 @@ def main(argv=None) -> None:
     results: Dict[str, Dict[str, float]] = {}
     sizes = [(n, m, True) for n, m in SIZES]
     sizes += [(n, m, False) for n, m in SCALE_SIZES]
+    if not args.quick:
+        # the 8192×32 rung exists on the candidate frontier; the dense
+        # column rides along as the (much slower) A/B
+        sizes += [(8192, 32, False)]
     for n, m, with_eager in sizes:
         big = n >= 1024
         r = bench_size(
             n, m,
             eager_rounds=3 if (args.quick or big) else 6,
-            scan_rounds=5 if (args.quick or big) else 15,
+            scan_rounds=3 if n >= 8192 else (5 if (args.quick or big)
+                                             else 15),
             fleet_seeds=2 if (args.quick or big) else 4,
-            with_eager=with_eager)
+            with_eager=with_eager,
+            with_fleet=n < 8192)
         results[f"{n}x{m}"] = r
         emit(f"rounds_n{n}_m{m}", 1e6 / r["scanned_rps"],
-             {k: v for k, v in r.items() if k != "stages"})
+             {k: v for k, v in r.items()
+              if k not in ("stages", "candidates")})
 
     with open(OUT, "w") as fh:
         json.dump({"spec": dataclasses.asdict(SPEC), "results": results},

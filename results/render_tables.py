@@ -1,16 +1,23 @@
 """Render EXPERIMENTS.md tables from the dry-run jsonl records, and the
-paper's Figs. 8-12-style cost/accuracy comparison tables from sweep
-summaries.
+paper's Figs. 8-12-style cost/accuracy comparisons from sweep summaries —
+as markdown tables (``sweep``) or matplotlib panels (``plot``).
 
   python results/render_tables.py dryrun  results/dryrun.jsonl
   python results/render_tables.py roofline results/dryrun.jsonl
   python results/render_tables.py sweep   results/sweep_showcase
   python results/render_tables.py sweep   'results/sweep_*'     # glob ok
+  python results/render_tables.py plot    results/sweep_showcase [out_dir]
 
 ``sweep`` accepts a sweep directory, its summary.json path, or a glob of
 either; each summary renders one table per metric (final accuracy, mean
 round cost) with scenarios as rows and scheme columns (policy/allocator/
 scheduler/NOMA), mean ± spread over seeds — the Figs. 8-12 protocol view.
+
+``plot`` takes the same inputs and writes one PNG per summary × metric
+(accuracy / cost vs round): one panel per scenario, one line per scheme,
+mean over seeds with a ±std band — the figure view of the same protocol.
+The per-round trajectories come from the per-cell JSON files next to each
+summary.json (``run_sweep`` writes both).
 """
 import glob as _glob
 import json
@@ -133,7 +140,7 @@ def sweep_tables(summary):
     return "\n".join(out)
 
 
-def _iter_summaries(path):
+def _iter_summaries(path, with_dir=False):
     """Yield summary dicts from a dir / summary.json / glob of either."""
     matches = sorted(_glob.glob(path)) or [path]
     for p in matches:
@@ -142,7 +149,8 @@ def _iter_summaries(path):
         if not os.path.exists(p):
             continue
         with open(p) as fh:
-            yield json.load(fh)
+            summary = json.load(fh)
+        yield (summary, os.path.dirname(p)) if with_dir else summary
 
 
 def sweep_report(path):
@@ -152,10 +160,122 @@ def sweep_report(path):
     return "\n\n".join(parts)
 
 
+# ---------------------------------------------------------------------------
+# Sweep summaries -> Figs. 8-12 comparison PLOTS (matplotlib panels)
+# ---------------------------------------------------------------------------
+
+_PLOT_METRICS = {"accuracy": "Test accuracy",
+                 "cost": "Round cost (Eq. 23a)"}
+
+
+def _load_trajectories(summary, sweep_dir):
+    """rows[metric][scenario][scheme] -> list over seeds of per-round
+    lists, read from the per-cell JSON files ``run_sweep`` persisted next
+    to the summary."""
+    rows = defaultdict(lambda: defaultdict(lambda: defaultdict(list)))
+    for cid in summary["final"]:
+        cell_path = os.path.join(sweep_dir, f"{cid}.json")
+        if not os.path.exists(cell_path):
+            continue
+        with open(cell_path) as fh:
+            metrics = json.load(fh)["metrics"]
+        scenario, scheme, _ = _parse_cell_id(cid)
+        for metric in _PLOT_METRICS:
+            rows[metric][scenario][scheme].append(metrics[metric])
+    return rows
+
+
+def _mean_std_curves(per_seed):
+    """list-of-(R,)-lists -> (mean (R,), std (R,)) without numpy."""
+    n, r = len(per_seed), len(per_seed[0])
+    mean = [sum(s[i] for s in per_seed) / n for i in range(r)]
+    if n < 2:
+        return mean, [0.0] * r
+    std = [math.sqrt(sum((s[i] - mean[i]) ** 2 for s in per_seed)
+                     / (n - 1)) for i in range(r)]
+    return mean, std
+
+
+def sweep_plots(summary, sweep_dir, out_dir):
+    """One PNG per metric: per-scenario panels, one line per scheme,
+    mean over seeds with a ±std band.  Returns the written paths."""
+    import matplotlib
+    matplotlib.use("Agg")
+    import matplotlib.pyplot as plt
+
+    rows = _load_trajectories(summary, sweep_dir)
+    scenario_order = summary.get("axes", {}).get("scenarios") or sorted(
+        {s for m in rows.values() for s in m})
+    written = []
+    for metric, title in _PLOT_METRICS.items():
+        scenarios = [s for s in scenario_order if s in rows[metric]]
+        if not scenarios:
+            continue
+        schemes = sorted({sch for s in scenarios
+                          for sch in rows[metric][s]})
+        ncol = min(3, max(len(scenarios), 1))
+        nrow = -(-len(scenarios) // ncol)
+        fig, axes = plt.subplots(nrow, ncol, squeeze=False, sharex=True,
+                                 figsize=(4.2 * ncol, 3.2 * nrow))
+        for i, scenario in enumerate(scenarios):
+            ax = axes[i // ncol][i % ncol]
+            for j, scheme in enumerate(schemes):
+                per_seed = rows[metric][scenario].get(scheme)
+                if not per_seed:
+                    continue
+                mean, std = _mean_std_curves(per_seed)
+                r = range(1, len(mean) + 1)
+                color = f"C{j % 10}"
+                ax.plot(r, mean, label=scheme, color=color, lw=1.6)
+                if any(std):
+                    lo = [m - s for m, s in zip(mean, std)]
+                    hi = [m + s for m, s in zip(mean, std)]
+                    ax.fill_between(r, lo, hi, color=color, alpha=0.15,
+                                    lw=0)
+            ax.set_title(scenario, fontsize=10)
+            ax.set_xlabel("global round")
+            ax.grid(True, alpha=0.3)
+        for i in range(len(scenarios), nrow * ncol):
+            axes[i // ncol][i % ncol].set_axis_off()
+        axes[0][0].set_ylabel(title)
+        # collect the legend across ALL panels: a scheme missing from the
+        # first scenario must still be identifiable in the others
+        by_label = {}
+        for row in axes:
+            for ax in row:
+                for h, l in zip(*ax.get_legend_handles_labels()):
+                    by_label.setdefault(l, h)
+        fig.legend(by_label.values(), by_label.keys(), loc="lower center",
+                   ncol=min(len(schemes), 4), fontsize=8, frameon=False)
+        fig.suptitle(f"sweep `{summary['name']}` — {title}", fontsize=12)
+        fig.tight_layout(rect=(0, 0.06, 1, 0.97))
+        out = os.path.join(out_dir,
+                           f"sweep_{summary['name']}_{metric}.png")
+        fig.savefig(out, dpi=130)
+        plt.close(fig)
+        written.append(out)
+    return written
+
+
+def plot_report(path, out_dir=None):
+    written = []
+    for summary, sweep_dir in _iter_summaries(path, with_dir=True):
+        dest = out_dir or sweep_dir
+        os.makedirs(dest, exist_ok=True)
+        written += sweep_plots(summary, sweep_dir, dest)
+    if not written:
+        raise SystemExit(f"no sweep summary found under {path!r}")
+    return written
+
+
 if __name__ == "__main__":
     kind, path = sys.argv[1], sys.argv[2]
     if kind == "sweep":
         print(sweep_report(path))
+    elif kind == "plot":
+        for p in plot_report(path, sys.argv[3] if len(sys.argv) > 3
+                             else None):
+            print(f"wrote {p}")
     else:
         recs = load(path)
         print(dryrun_table(recs) if kind == "dryrun"

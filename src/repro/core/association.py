@@ -266,6 +266,124 @@ def resolve_parallel(order: jnp.ndarray, dist: jnp.ndarray, quota: int,
             (taken[:, None] >= 0)).astype(jnp.int32)
 
 
+def resolve_candidates(pref: jnp.ndarray, cand, quota: int,
+                       n_edges: int) -> jnp.ndarray:
+    """``resolve_parallel`` re-expressed over the (N, K) candidate frontier
+    (DESIGN.md §9): the same batched deferred-acceptance sweeps, with every
+    per-sweep tensor O(N·K) instead of O(N·M) and the per-edge proposal
+    cut-off read off ONE segmented cumulative count over a rank order
+    built once — a scatter-built inverse index over the N·K pairs replaces
+    the (M, N) argsort + per-sweep ``top_k`` of the dense resolver.
+
+    Sweep-for-sweep equivalence with ``resolve_parallel``: when ``valid``
+    covers every in-coverage pair (K ≥ max coverage degree) the eligible
+    pair set, the per-edge preference order (score desc, client index
+    asc), the proposal rule (rank among eligible < deficit) and the client
+    choice (first-minimum over (distance, edge)-sorted slots ==
+    (distance, edge-index) lexicographic argmin) all coincide with the
+    dense sweep's, so ``assigned`` evolves identically at every sweep and
+    the matching is bit-identical (pinned by tests/test_candidates.py).
+    With a smaller K the same sweeps play Gale–Shapley on the pruned pair
+    set: the result is still a feasible stable matching of that sub-market
+    (quota / one-edge-per-client / validity invariants hold).
+
+    pref: (N, K) per-pair preference (higher = better; invalid pairs may
+    hold any value).  ``cand.idx`` rows MUST be (distance, edge)-sorted —
+    ``build_candidates`` guarantees it.
+    Returns assigned (N,) int32 — edge index or −1.
+    """
+    idx, valid, dist = cand.idx, cand.valid, cand.dist
+    n, k = idx.shape
+    nk = n * k
+    flat_e = idx.reshape(-1)
+    flat_s = jnp.where(valid, pref, -jnp.inf).reshape(-1)
+    # one rank order for the whole resolution: pairs by (edge asc, score
+    # desc, flat order asc) — lexsort is stable, and flat order is client-
+    # major, so exact score ties break on the lower client index, exactly
+    # like the dense stable ``argsort(-pref, axis=0)``
+    perm = jnp.lexsort((-flat_s, flat_e))                      # (NK,)
+    inv = jnp.zeros((nk,), jnp.int32).at[perm].set(
+        jnp.arange(nk, dtype=jnp.int32))
+    sorted_e = flat_e[perm]
+    iota = jnp.arange(nk, dtype=jnp.int32)
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_e[1:] != sorted_e[:-1]])
+    seg_start = jax.lax.cummax(jnp.where(is_start, iota, 0))   # (NK,)
+    col_k = jnp.arange(k, dtype=jnp.int32)
+    max_sweeps = nk + 2
+
+    def cond(s):
+        _, _, done, it = s
+        return (~done) & (it < max_sweeps)
+
+    def body(s):
+        assigned, rejected, _, it = s
+        held = (assigned[:, None] == idx) & (assigned >= 0)[:, None]
+        # per-edge held count: ints scatter-add exactly; a −1 (unmatched)
+        # client adds weight 0 at slot 0
+        deficit = quota - jnp.zeros((n_edges,), jnp.int32).at[
+            jnp.maximum(assigned, 0)].add((assigned >= 0).astype(jnp.int32))
+        elig = valid & (~rejected) & (~held)                   # (N, K)
+        es = elig.reshape(-1)[perm]                            # rank order
+        # eligible-with-smaller-rank count via ONE segmented cumsum: the
+        # deficit-th smallest eligible rank cut-off of the dense resolver,
+        # without per-sweep top_k
+        c = jnp.cumsum(es.astype(jnp.int32))
+        before = jnp.where(seg_start > 0, c[jnp.maximum(seg_start - 1, 0)],
+                           0)
+        n_better = c - es.astype(jnp.int32) - before
+        prop_sorted = es & (n_better < deficit[sorted_e])
+        propose = prop_sorted[inv].reshape(n, k)
+        offer = propose | held
+        # slots are (distance, edge)-sorted, so the FIRST minimum over the
+        # offer-masked distances is the strict lexicographic best offer
+        ckey = jnp.where(offer, dist, jnp.inf)
+        best = jnp.argmin(ckey, axis=1).astype(jnp.int32)
+        has = jnp.any(offer, axis=1)
+        assigned = jnp.where(
+            has, jnp.take_along_axis(idx, best[:, None], axis=1)[:, 0],
+            jnp.asarray(-1, jnp.int32))
+        rejected = rejected | (offer & (col_k[None, :] != best[:, None]))
+        return assigned, rejected, ~jnp.any(propose), it + 1
+
+    state = (jnp.full((n,), -1, jnp.int32), ~valid,
+             jnp.asarray(False), jnp.asarray(0, jnp.int32))
+    return jax.lax.while_loop(cond, body, state)[0]
+
+
+def associate_candidates(policy: str, *, scores: jnp.ndarray | None,
+                         gains: jnp.ndarray, cand, quota: int, key,
+                         n_edges: int) -> jnp.ndarray:
+    """Candidate-frontier association (DESIGN.md §9): the (N, K) analogue
+    of ``associate_jax``, returning the compact assigned vector (N,).
+
+    ``scores``: fcea competency ALREADY on the frontier — (N, K) from
+    ``fuzzy.score_candidates`` — or a per-client (N,) vector (broadcast
+    here).  A dense (N, M) matrix is NOT accepted: with K = M its shape is
+    indistinguishable from the frontier layout, so the caller must gather
+    (``candidates.gather``) explicitly.  gcea gathers the gains; rcea
+    draws its uniform preference at the DENSE (N, M) shape and gathers,
+    so the PRNG stream — and hence the matching — is bit-identical to the
+    dense path for every policy.
+    """
+    from repro.core import candidates as _cand
+    if policy == "fcea":
+        pref = scores
+        if pref.ndim == 1:
+            pref = jnp.broadcast_to(pref[:, None], cand.idx.shape)
+        if pref.shape != cand.idx.shape:
+            raise ValueError(
+                f"fcea candidate scores must be (N, K) {cand.idx.shape} "
+                f"(frontier layout), got {pref.shape}")
+    elif policy == "gcea":
+        pref = _cand.gather(cand, gains)
+    elif policy == "rcea":
+        pref = _cand.gather(cand, jax.random.uniform(key, gains.shape))
+    else:
+        raise ValueError(f"unknown association policy {policy!r}")
+    return resolve_candidates(pref, cand, quota, n_edges)
+
+
 RESOLVERS: Dict[str, Callable[..., jnp.ndarray]] = {
     "parallel": resolve_parallel,
     "serial": resolve_jax,

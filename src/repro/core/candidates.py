@@ -1,0 +1,97 @@
+"""The (N, K) candidate edge frontier (DESIGN.md §9).
+
+The paper's client orchestration is geometrically local: Eq. 11 coverage
+means a client can only ever associate with the handful of edge servers
+whose coverage disk it sits in, yet the dense round engine scores, ranks
+and bills all (N, M) client-edge pairs.  A ``CandidateSet`` is the pruned
+frontier that every round stage consumes instead:
+
+* ``idx``   (N, K) int32 — each client's K nearest edge indices, row-sorted
+  by the STRICT client preference order (distance ascending, edge index
+  breaking exact ties).  That ordering is load-bearing: the candidate
+  resolver's first-minimum ``argmin`` over slots IS the (distance, edge)
+  lexicographic tie-break of the dense resolvers (DESIGN.md §8.1), so no
+  per-slot distance comparison logic is ever needed.
+* ``valid`` (N, K) bool — in coverage (dist ≤ radius) and, in a dynamic
+  scenario, available this round.  Coverage is a distance threshold, so
+  the in-coverage edges are exactly a prefix-by-validity of the
+  distance-sorted row: K ≥ the maximum in-coverage degree ⇒ the candidate
+  set loses nothing and every candidate stage is bit-identical to dense
+  (the §9 parity contract, pinned by tests/test_candidates.py).
+* ``dist``  (N, K) float — the gathered distances (the client-preference
+  keys), so downstream stages never index the dense (N, M) field.
+
+``K`` is static (``EngineSpec.candidates_k``); the set is rebuilt once per
+round from the scenario's distance field — O(N·M) for the top-k, after
+which fuzzy scoring, the association sweeps and the SIC/cost surface all
+run on (N, K) or (N,) tensors.  Everything here is row-local over
+clients, so the build shards cleanly over a ``("clients",)`` mesh.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class CandidateSet(NamedTuple):
+    """Per-client pruned edge frontier (a pytree; vmap/scan/shard-safe)."""
+    idx: jnp.ndarray     # (N, K) int32 edge indices, (dist, edge)-sorted
+    valid: jnp.ndarray   # (N, K) bool — in-coverage (and available)
+    dist: jnp.ndarray    # (N, K) gathered client-edge distances
+
+
+def build_candidates(dist: jnp.ndarray, k: int, *,
+                     coverage_radius_m: float,
+                     avail: Optional[jnp.ndarray] = None) -> CandidateSet:
+    """Top-``k`` nearest edges per client from the (N, M) distance field.
+
+    ``lax.top_k`` of the negated distances returns ascending distance with
+    exact ties preferring the LOWER edge index — precisely the strict
+    client preference order the resolvers need.  ``avail`` (N,) masks a
+    dropped client's whole row invalid (the §6 contract: it is out of
+    every edge's coverage this round).
+    """
+    n, m = dist.shape
+    k = min(int(k), m)
+    neg, idx = jax.lax.top_k(-dist, k)                       # (N, K)
+    dk = -neg
+    valid = dk <= coverage_radius_m
+    if avail is not None:
+        valid = valid & (avail > 0)[:, None]
+    return CandidateSet(idx=idx.astype(jnp.int32), valid=valid, dist=dk)
+
+
+def gather(cand: CandidateSet, field: jnp.ndarray) -> jnp.ndarray:
+    """Gather an (N, M) per-pair field down to the (N, K) frontier."""
+    return jnp.take_along_axis(field, cand.idx, axis=1)
+
+
+def assigned_one_hot(assigned: jnp.ndarray, n_edges: int) -> jnp.ndarray:
+    """(N,) assigned-edge vector (−1 = unmatched) -> (N, M) one-hot int32,
+    the dense association layout the training/aggregation stages consume."""
+    col = jnp.arange(n_edges, dtype=assigned.dtype)
+    return ((assigned[:, None] == col[None, :]) &
+            (assigned[:, None] >= 0)).astype(jnp.int32)
+
+
+def own_edge_gather(assigned: jnp.ndarray, field: jnp.ndarray) -> jnp.ndarray:
+    """(N,) values of an (N, M) field at each client's assigned edge
+    (0.0 for unmatched clients) — bit-identical to the dense
+    ``sum(field * one_hot, axis=1)`` (one nonzero · 1.0 plus exact zeros),
+    without touching the pruned pairs."""
+    safe = jnp.maximum(assigned, 0)
+    got = jnp.take_along_axis(field, safe[:, None], axis=1)[:, 0]
+    return jnp.where(assigned >= 0, got, 0.0)
+
+
+def max_coverage_degree(dist, coverage_radius_m: float,
+                        avail=None) -> int:
+    """Host-side helper: the smallest K that loses nothing (the §9 parity
+    bound).  Use at init/test time — NOT inside jit (returns a python int)."""
+    import numpy as np
+    cov = np.asarray(dist) <= coverage_radius_m
+    if avail is not None:
+        cov = cov & (np.asarray(avail) > 0)[:, None]
+    return int(cov.sum(axis=1).max()) if cov.size else 0

@@ -46,6 +46,40 @@ def local_compute(cfg, f_hz: jnp.ndarray, n_samples: jnp.ndarray,
 _SORTED_SIC_MIN_N = 64
 
 
+def uplink_assigned(cfg, power_w: jnp.ndarray, own_gain: jnp.ndarray,
+                    assigned: jnp.ndarray, *, n_edges: int,
+                    max_per_edge: int, noma_enabled: bool = True):
+    """``uplink`` over the COMPACT association (DESIGN.md §9): (N,) power,
+    (N,) gain to the assigned edge, (N,) assigned edge index (−1 =
+    unmatched) — the billed Eq. 23 surface without the (N, M) rate matrix.
+
+    NOMA rates come from ``noma.sic_rates_assigned`` (bit-identical to the
+    dense sorted/top-k SIC read at the associated pairs); the OMA branch
+    reads its per-edge occupancy off one exact integer scatter-add.
+    Returns (t_com (N,), e_com (N,), rates (N,)).
+    """
+    noise = noma.noise_power_w(cfg.noise_dbm_per_hz, cfg.bandwidth_hz)
+    matched = assigned >= 0
+    if noma_enabled:
+        rates = noma.sic_rates_assigned(
+            power_w, own_gain, assigned, n_edges=n_edges,
+            max_per_edge=max_per_edge, bandwidth_hz=cfg.bandwidth_hz,
+            noise_w=noise)
+    else:
+        ones = matched.astype(jnp.float32)
+        k_m = jnp.maximum(jnp.zeros((n_edges,)).at[
+            jnp.maximum(assigned, 0)].add(ones), 1.0)            # (M,)
+        share = jnp.where(matched, 1.0 / k_m[jnp.maximum(assigned, 0)], 0.0)
+        band = cfg.bandwidth_hz * share
+        snr = power_w * jnp.where(matched, own_gain, 0.0) \
+            / jnp.maximum(noise * share, 1e-30)
+        rates = band * jnp.log2(1.0 + snr)
+    safe_rates = jnp.where(matched, jnp.maximum(rates, 1.0), 1.0)
+    t_com = jnp.where(matched, cfg.model_size_bits / safe_rates, 0.0)
+    e_com = power_w * t_com
+    return t_com, e_com, rates
+
+
 def uplink(cfg, power_w: jnp.ndarray, gains: jnp.ndarray,
            assoc: jnp.ndarray, *, noma_enabled: bool = True,
            sic_impl: str = "auto", sic_max_per_edge: int | None = None):
@@ -125,13 +159,33 @@ def round_cost(cfg, *, power_w: jnp.ndarray, f_hz: jnp.ndarray,
                n_samples: jnp.ndarray, noma_enabled: bool = True,
                capacitance: jnp.ndarray | None = None,
                sic_impl: str = "auto",
-               sic_max_per_edge: int | None = None) -> RoundCost:
-    """Full Eq. 23a cost for one global round."""
+               sic_max_per_edge: int | None = None,
+               assigned: jnp.ndarray | None = None) -> RoundCost:
+    """Full Eq. 23a cost for one global round.
+
+    ``assigned`` (N,) — the compact assigned-edge vector of the candidate
+    path (DESIGN.md §9).  When given, the uplink stage runs entirely on
+    (N,)/(M, k) tensors via ``uplink_assigned`` (``sic_impl`` is moot —
+    the compact SIC is the sorted/top-k formulation; ``sic_max_per_edge``
+    must then be the admission quota); the cheap per-edge masked
+    reductions below still use the one-hot ``assoc``, keeping their float
+    summation order — and hence the bill — identical to the dense path.
+    """
     t_cmp, e_cmp = local_compute(cfg, f_hz, n_samples, capacitance)
-    t_com, e_com, rates = uplink(cfg, power_w, gains, assoc,
-                                 noma_enabled=noma_enabled,
-                                 sic_impl=sic_impl,
-                                 sic_max_per_edge=sic_max_per_edge)
+    if assigned is not None:
+        if sic_max_per_edge is None:
+            raise ValueError("round_cost(assigned=...) needs the static "
+                             "sic_max_per_edge admission bound")
+        from repro.core import candidates as _cand
+        t_com, e_com, rates = uplink_assigned(
+            cfg, power_w, _cand.own_edge_gather(assigned, gains), assigned,
+            n_edges=assoc.shape[1], max_per_edge=sic_max_per_edge,
+            noma_enabled=noma_enabled)
+    else:
+        t_com, e_com, rates = uplink(cfg, power_w, gains, assoc,
+                                     noma_enabled=noma_enabled,
+                                     sic_impl=sic_impl,
+                                     sic_max_per_edge=sic_max_per_edge)
     associated = jnp.sum(assoc, axis=1) > 0
     client_time = jnp.where(associated, t_cmp + t_com, 0.0)
     client_energy = jnp.where(associated, e_cmp + e_com, 0.0)

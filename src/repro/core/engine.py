@@ -35,8 +35,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (aggregation, association, cost, env, fuzzy, noma,
-                        pdd, staleness)
+from repro.core import (aggregation, association, candidates, cost, env,
+                        fuzzy, noma, pdd, staleness)
+from repro.core.candidates import CandidateSet
 from repro.data import federated
 from repro.models.mlp import MLPClassifier
 from repro import scenarios
@@ -74,6 +75,12 @@ class EngineSpec:
     resolver: str = "parallel"
     sic_impl: str = "auto"
     pallas_score: bool = False
+    # (N, K) candidate frontier (DESIGN.md §9): score/associate/bill only
+    # each client's K nearest edges instead of all M.  ``None`` = dense
+    # (the golden-pinned PR-4 path, bit-for-bit); K ≥ the max in-coverage
+    # degree is bit-identical to dense by the §9 parity contract, smaller
+    # K prunes the market (feasibility invariants still hold).
+    candidates_k: Optional[int] = None
 
 
 class RoundBundle(NamedTuple):
@@ -231,23 +238,54 @@ def _local_sgd(model: MLPClassifier, lr: float, tau1: int, batch_size: int):
 
 
 def _associate(cfg, spec: EngineSpec, key, gains, dist, counts, stale,
-               avail: Optional[jnp.ndarray] = None) -> jnp.ndarray:
-    """(N, M) one-hot association, fully in JAX.  ``avail`` (N,) masks
-    unavailable clients out of coverage (scenario dropout)."""
+               avail: Optional[jnp.ndarray] = None,
+               cand: Optional[CandidateSet] = None) -> jnp.ndarray:
+    """Association, fully in JAX.  ``avail`` (N,) masks unavailable
+    clients out of coverage (scenario dropout).
+
+    Dense (``cand=None``): returns the (N, M) one-hot.  Candidate mode
+    (DESIGN.md §9): fuzzy scoring and the resolver sweeps run on the
+    (N, K) frontier (``avail`` is already folded into ``cand.valid`` by
+    the builder) and the COMPACT assigned vector (N,) comes back."""
     scores = None
     if spec.policy == "fcea":
-        if spec.pallas_score:
-            from repro.kernels import hfl_ops    # cycle-free lazy import
+        if cand is not None:
+            if spec.pallas_score:
+                from repro.kernels import hfl_ops    # cycle-free lazy import
+                scores = hfl_ops.score_candidates(
+                    gains, cand.idx, counts, stale,
+                    data_max=float(cfg.max_samples))
+            else:
+                scores = fuzzy.score_candidates(
+                    gains, cand, counts, stale,
+                    data_max=float(cfg.max_samples))
+        elif spec.pallas_score:
+            from repro.kernels import hfl_ops        # cycle-free lazy import
             scores = hfl_ops.score_matrix(gains, counts, stale,
                                           data_max=float(cfg.max_samples))
         else:
             scores = fuzzy.score_matrix(gains, counts, stale,
                                         data_max=float(cfg.max_samples))
+    if cand is not None:
+        return association.associate_candidates(
+            spec.policy, scores=scores, gains=gains, cand=cand,
+            quota=quota_for(cfg, spec), key=key, n_edges=cfg.n_edges)
     return association.associate_jax(
         spec.policy, scores=scores, gains=gains, dist=dist,
         quota=quota_for(cfg, spec),
         coverage_radius_m=coverage_radius(cfg), key=key, avail=avail,
         resolver=spec.resolver)
+
+
+def _build_candidates(cfg, spec: EngineSpec, dist,
+                      avail: Optional[jnp.ndarray]
+                      ) -> Optional[CandidateSet]:
+    """The per-round (N, K) frontier, or None on the dense path."""
+    if spec.candidates_k is None:
+        return None
+    return candidates.build_candidates(
+        dist, spec.candidates_k, coverage_radius_m=coverage_radius(cfg),
+        avail=avail)
 
 
 def _grid_allocate(cfg, spec: EngineSpec, assoc, gains, counts, dist,
@@ -270,18 +308,26 @@ def _grid_allocate(cfg, spec: EngineSpec, assoc, gains, counts, dist,
 
 
 def _allocate(cfg, spec: EngineSpec, key, assoc, gains, counts,
-              actor_params, scen: Optional[ScenarioState], dist
+              actor_params, scen: Optional[ScenarioState], dist,
+              assigned: Optional[jnp.ndarray] = None
               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """(p_w (N,), f_hz (N,)) per the configured allocator (§IV-C).
-    ``dist`` (N, M) feeds the fpa/fca grid search's EnvParams."""
+    ``dist`` (N, M) feeds the fpa/fca grid search's EnvParams; on the
+    candidate path ``assigned`` (N,) lets the DDPG observation gather its
+    own-edge gains instead of the (N, M) one-hot product."""
     n = cfg.n_clients
     mid_p = jnp.full((n,), 0.5 * (cfg.p_min_w + cfg.p_max_w))
     mid_f = jnp.full((n,), 0.5 * (cfg.f_min_hz + cfg.f_max_hz))
     if spec.allocator == "ddpg" and actor_params is not None:
         from repro.core import ddpg                 # cycle-free lazy import
         # in a dynamic scenario the observation gains an availability slice
-        obs = env.observe(assoc, gains, counts,
-                          avail=None if scen is None else scen.avail)
+        avail = None if scen is None else scen.avail
+        if assigned is not None:
+            obs = env.observe_assigned(
+                assigned, candidates.own_edge_gather(assigned, gains),
+                counts, avail=avail)
+        else:
+            obs = env.observe(assoc, gains, counts, avail=avail)
         act = ddpg.actor_apply(actor_params, obs)
         return env.decode_action(cfg, act, n)
     if spec.allocator == "rra":
@@ -311,10 +357,15 @@ def associate_snapshot(cfg, spec: EngineSpec, state: RoundState,
     cannot drift from each other."""
     dynamic = spec.scenario != "static"
     scen = state.scenario
-    return _associate(cfg, spec, round_keys(spec, state.key)[3],
-                      state.gains, scen.dist if dynamic else bundle.dist,
-                      bundle.counts, state.staleness,
-                      scen.avail if dynamic else None)
+    dist = scen.dist if dynamic else bundle.dist
+    avail = scen.avail if dynamic else None
+    cand = _build_candidates(cfg, spec, dist, avail)
+    out = _associate(cfg, spec, round_keys(spec, state.key)[3],
+                     state.gains, dist, bundle.counts, state.staleness,
+                     avail, cand)
+    if cand is not None:      # compact assigned vector -> the (N, M) view
+        out = candidates.assigned_one_hot(out, cfg.n_edges)
+    return out
 
 
 def _schedule(cfg, spec: EngineSpec, rc_all: cost.RoundCost
@@ -455,16 +506,30 @@ def round_step(cfg, spec: EngineSpec, state: RoundState,
                               path_loss_exponent=cfg.path_loss_exponent,
                               rho=spec.fading_rho)
     # 2. fuzzy scoring + association (pure JAX — no host loop);
-    #    unavailable clients are out of coverage this round
-    assoc = _associate(cfg, spec, k_assoc, gains, dist, bundle.counts,
-                       state.staleness, avail).astype(jnp.float32)
-    if dynamic:
-        # explicit Eq. 11/17/23a mask: even a policy that ignored ``avail``
-        # cannot train on, aggregate or bill a dropped client
-        assoc = assoc * avail[:, None]
+    #    unavailable clients are out of coverage this round.  With
+    #    ``spec.candidates_k`` set, the (N, K) frontier is built once here
+    #    and scoring/resolution/billing all run on it (DESIGN.md §9);
+    #    the (N, M) one-hot is reconstructed only for the training/
+    #    aggregation stage's cheap masked reductions.
+    cand = _build_candidates(cfg, spec, dist, avail)
+    if cand is not None:
+        assigned = _associate(cfg, spec, k_assoc, gains, dist,
+                              bundle.counts, state.staleness, avail, cand)
+        assoc = candidates.assigned_one_hot(
+            assigned, cfg.n_edges).astype(jnp.float32)
+        # ``cand.valid`` already excludes dropped clients — no avail mask
+    else:
+        assigned = None
+        assoc = _associate(cfg, spec, k_assoc, gains, dist, bundle.counts,
+                           state.staleness, avail).astype(jnp.float32)
+        if dynamic:
+            # explicit Eq. 11/17/23a mask: even a policy that ignored
+            # ``avail`` cannot train on, aggregate or bill a dropped client
+            assoc = assoc * avail[:, None]
     # 3. resource allocation, clamped to the device class caps
     p, f = _allocate(cfg, spec, k_alloc, assoc, gains, bundle.counts,
-                     actor_params, scen if dynamic else None, dist)
+                     actor_params, scen if dynamic else None, dist,
+                     assigned)
     if dynamic:
         p = jnp.minimum(p, scen.p_max_w)
         f = jnp.minimum(f, scen.f_max_hz)
@@ -476,7 +541,8 @@ def round_step(cfg, spec: EngineSpec, state: RoundState,
                              noma_enabled=spec.noma_enabled,
                              capacitance=scen.kappa if dynamic else None,
                              sic_impl=spec.sic_impl,
-                             sic_max_per_edge=quota_for(cfg, spec))
+                             sic_max_per_edge=quota_for(cfg, spec),
+                             assigned=assigned)
     z = _schedule(cfg, spec, rc_all)
     rc = cost.apply_schedule(cfg, rc_all, z)
     # 5. τ₂·τ₁ training + hierarchical aggregation
@@ -617,6 +683,122 @@ def run_fleet_sharded(cfg, spec: EngineSpec, states: RoundState,
         out = jax.tree.map(lambda l: l[:fleet], out)
         ms = jax.tree.map(lambda l: l[:fleet], ms)
     return out, ms
+
+
+# ---------------------------------------------------------------------------
+# Client-axis sharding (DESIGN.md §9.3): split N over a 1-D ("clients",)
+# mesh for N ≫ 10⁴ single-simulation scale.  Unlike the fleet axis, the
+# client axis is NOT embarrassingly parallel — association, aggregation and
+# the Eq. 23 bill all reduce over clients — but on the candidate layout
+# every per-client stage (candidate build, fuzzy frontier scoring, local
+# SGD, the resolver's elementwise sweep work) is row-local over N, and the
+# cross-client terms are exactly the per-edge/global reductions GSPMD
+# lowers to collectives of (M,)- or scalar-sized partials.  We device_put
+# the N-leading leaves P("clients") and let GSPMD partition the jitted
+# round program; nothing in round_step needs to change.
+# ---------------------------------------------------------------------------
+
+def client_mesh(devices=None) -> "jax.sharding.Mesh":
+    """1-D ``("clients",)`` mesh over ``devices`` (default: all of them).
+    On CPU, spawn placeholder devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=K`` *before* jax
+    imports (see tests/test_client_sharding.py)."""
+    devices = jax.devices() if devices is None else list(devices)
+    return jax.sharding.Mesh(np.asarray(devices), ("clients",))
+
+
+def _client_shardings(state: RoundState, bundle: RoundBundle,
+                      mesh: "jax.sharding.Mesh"):
+    """Per-leaf placement: N-leading leaves split over ``("clients",)``,
+    everything else (global model, PRNG key, edge positions, test set)
+    replicated."""
+    P = jax.sharding.PartitionSpec
+    cl = jax.sharding.NamedSharding(mesh, P("clients"))
+    rep = jax.sharding.NamedSharding(mesh, P())
+    scen_sh = ScenarioState(
+        pos=cl, waypoint=cl, speed=cl, avail=cl, p_drop=cl, p_return=cl,
+        f_max_hz=cl, p_max_w=cl, kappa=cl, edges=rep, dist=cl)
+    state_sh = RoundState(
+        global_params=jax.tree.map(lambda _: rep, state.global_params),
+        client_params=jax.tree.map(lambda _: cl, state.client_params),
+        gains=cl, staleness=cl, key=rep, round_idx=rep, scenario=scen_sh)
+    bundle_sh = RoundBundle(dist=cl, x=cl, y=cl, counts=cl,
+                            test_x=rep, test_y=rep)
+    return state_sh, bundle_sh
+
+
+def shard_clients(state: RoundState, bundle: RoundBundle,
+                  mesh: "jax.sharding.Mesh | None" = None
+                  ) -> Tuple[RoundState, RoundBundle]:
+    """Place one simulation with its client axis split over ``mesh``.
+    Requires ``cfg.n_clients`` divisible by the device count — pad a
+    ragged N with ``pad_clients`` first."""
+    mesh = client_mesh() if mesh is None else mesh
+    state_sh, bundle_sh = _client_shardings(state, bundle, mesh)
+    return (jax.device_put(state, state_sh),
+            jax.device_put(bundle, bundle_sh))
+
+
+def pad_clients(cfg, state: RoundState, bundle: RoundBundle, multiple: int):
+    """Pad N up to a multiple of ``multiple`` with INERT clients: parked
+    far outside every coverage disk (static distances and, under
+    mobility, positions — speed 0 keeps them parked), unavailable with a
+    sticky dropout chain, zero data counts.  They can never associate, so
+    they never train into an aggregate, never earn a rate and never bill
+    a joule (invariants pinned in tests/test_client_sharding.py).
+
+    Returns ``(cfg', state', bundle')`` with ``cfg.n_clients`` grown —
+    note a padded world is a DIFFERENT experiment from the unpadded one
+    (the per-round PRNG fans out over N, and per-round aggregates like
+    ``avg_staleness`` average over the padded axis); the parity guarantee
+    is sharded == unsharded on the SAME padded world.  A ddpg actor's
+    observation dim is 2N/3N — train it on the padded shape."""
+    n = cfg.n_clients
+    pad = (-n) % int(multiple)
+    if pad == 0:
+        return cfg, state, bundle
+    far = cfg.area_side_m * 1e3
+
+    def rep_last(leaf):
+        return jnp.concatenate([leaf, jnp.repeat(leaf[-1:], pad, axis=0)],
+                               axis=0)
+
+    def const(leaf, value):
+        tail = jnp.full((pad,) + leaf.shape[1:], value, leaf.dtype)
+        return jnp.concatenate([leaf, tail], axis=0)
+
+    scen = state.scenario
+    scen = scen._replace(
+        pos=const(scen.pos, far), waypoint=const(scen.waypoint, far),
+        speed=const(scen.speed, 0.0), avail=const(scen.avail, 0.0),
+        p_drop=const(scen.p_drop, 1.0), p_return=const(scen.p_return, 0.0),
+        f_max_hz=rep_last(scen.f_max_hz), p_max_w=rep_last(scen.p_max_w),
+        kappa=rep_last(scen.kappa), dist=const(scen.dist, far))
+    state = state._replace(
+        client_params=jax.tree.map(rep_last, state.client_params),
+        gains=rep_last(state.gains),
+        staleness=const(state.staleness, 0),
+        scenario=scen)
+    bundle = bundle._replace(
+        dist=const(bundle.dist, far), x=rep_last(bundle.x),
+        y=rep_last(bundle.y), counts=const(bundle.counts, 0.0))
+    return dataclasses.replace(cfg, n_clients=n + pad), state, bundle
+
+
+def run_scanned_client_sharded(cfg, spec: EngineSpec, state: RoundState,
+                               bundle: RoundBundle, n_rounds: int,
+                               actor_params: Optional[Params] = None, *,
+                               mesh: "jax.sharding.Mesh | None" = None
+                               ) -> Tuple[RoundState, RoundMetrics]:
+    """``run_scanned`` with the client axis sharded over ``mesh`` (default:
+    all devices), padding a ragged N with inert clients first.  Returns
+    the padded-world results — slice client-axis leaves to
+    ``cfg.n_clients`` yourself if you need the original N view."""
+    mesh = client_mesh() if mesh is None else mesh
+    cfg, state, bundle = pad_clients(cfg, state, bundle,
+                                     int(mesh.devices.size))
+    state, bundle = shard_clients(state, bundle, mesh)
+    return run_scanned(cfg, spec, state, bundle, n_rounds, actor_params)
 
 
 def metrics_row(metrics: RoundMetrics, i: Optional[int] = None):

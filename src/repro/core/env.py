@@ -65,6 +65,24 @@ def observe(assoc: jnp.ndarray, gains: jnp.ndarray,
     """
     associated = jnp.sum(assoc, axis=1) > 0
     own_gain = jnp.sum(gains * assoc, axis=1)                   # (N,)
+    return _observe_from(associated, own_gain, n_samples, avail)
+
+
+def observe_assigned(assigned: jnp.ndarray, own_gain: jnp.ndarray,
+                     n_samples: jnp.ndarray,
+                     avail: jnp.ndarray | None = None) -> jnp.ndarray:
+    """``observe`` from the COMPACT association (DESIGN.md §9): the
+    assigned-edge vector (N,) and the pre-gathered own-edge gains replace
+    the (N, M) one-hot product.  Gathering one gain and multiplying by an
+    exact 1.0 is the same float the dense masked sum produces, so the two
+    observations are bit-identical — the DDPG actor cannot tell which
+    layout the engine ran."""
+    return _observe_from(assigned >= 0, own_gain, n_samples, avail)
+
+
+def _observe_from(associated: jnp.ndarray, own_gain: jnp.ndarray,
+                  n_samples: jnp.ndarray,
+                  avail: jnp.ndarray | None) -> jnp.ndarray:
     g = jnp.log10(jnp.maximum(own_gain, 1e-20)) / 10.0 + 1.0
     d = n_samples / jnp.maximum(jnp.max(n_samples), 1.0)
     parts = [jnp.where(associated, g, 0.0),

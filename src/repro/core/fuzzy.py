@@ -144,6 +144,26 @@ def score_matrix(gains: jnp.ndarray, counts: jnp.ndarray,
     return per_edge(cq, dq, ms)
 
 
+def score_candidates(gains: jnp.ndarray, cand, counts: jnp.ndarray,
+                     staleness: jnp.ndarray, *, data_max: float
+                     ) -> jnp.ndarray:
+    """(N, K) competency scores on the candidate frontier (DESIGN.md §9).
+
+    The Eq. 21 CQ normalisation keeps its GLOBAL dB min/max over the full
+    (N, M) gain field — an O(N·M) elementwise reduction — and only the
+    expensive per-pair Mamdani inference + CoG defuzzification (the
+    O(N·M·G·5) term the dense ``score_matrix`` pays) is pruned to the N·K
+    candidate pairs.  Gather-then-normalise equals normalise-then-gather
+    elementwise, so each returned score is bit-identical to the dense
+    matrix entry at the same (client, edge) pair.
+    """
+    cq, dq, ms = normalized_inputs(gains, counts, staleness,
+                                   data_max=data_max)
+    cq_k = jnp.take_along_axis(cq, cand.idx, axis=1)            # (N, K)
+    per_slot = jax.vmap(fuzzy_scores, in_axes=(1, None, None), out_axes=1)
+    return per_slot(cq_k, dq, ms)
+
+
 def score_clients(channel_gain: jnp.ndarray, data_quantity: jnp.ndarray,
                   staleness: jnp.ndarray, *, gain_max: float | jnp.ndarray,
                   data_max: float | jnp.ndarray,

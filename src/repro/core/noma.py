@@ -111,6 +111,55 @@ def sic_rates_matrix(power_w: jnp.ndarray, gains: jnp.ndarray,
     return jnp.where(mask, jnp.take_along_axis(rate, inv, axis=0), 0.0)
 
 
+def sic_rates_assigned(power_w: jnp.ndarray, own_gain: jnp.ndarray,
+                       assigned: jnp.ndarray, *, n_edges: int,
+                       max_per_edge: int, bandwidth_hz: float,
+                       noise_w: float) -> jnp.ndarray:
+    """SIC rates from the COMPACT association (DESIGN.md §9): (N,) power,
+    (N,) gain to the assigned edge, (N,) assigned edge (−1 = unmatched)
+    -> (N,) rates at each client's own edge, 0.0 for unmatched clients.
+
+    Bit-identical to the dense top-k ``sic_rates_matrix`` read at the
+    associated pairs: one lexsort groups clients by (edge, received power
+    desc, client index) — the exact decode order of the sorted and
+    pairwise forms — and a scatter builds the same (M, k) per-edge decode
+    table ``lax.top_k`` would, zeros in the empty slots; the cumulative-
+    interference/SINR/rate arithmetic then runs the identical code on
+    identical values.  No (N, M) tensor is ever touched: the cost is
+    O(N log N) for the sort plus O(M·k) table work.
+
+    ``max_per_edge`` must bound the true per-edge occupancy (the engine
+    passes its admission quota), exactly like ``sic_rates_matrix``.
+    """
+    n = power_w.shape[0]
+    k = min(int(max_per_edge), n)
+    matched = assigned >= 0
+    rx = jnp.where(matched, power_w * own_gain, 0.0)             # (N,)
+    edge_key = jnp.where(matched, assigned, n_edges)             # sentinel
+    # (edge asc, rx desc, client asc): stable lexsort, flat order = client
+    perm = jnp.lexsort((-rx, edge_key))                          # (N,)
+    se = edge_key[perm]
+    iota = jnp.arange(n, dtype=jnp.int32)
+    is_start = jnp.concatenate([jnp.ones((1,), bool), se[1:] != se[:-1]])
+    pos = iota - jax.lax.cummax(jnp.where(is_start, iota, 0))    # in-segment
+    # the same (M, k) decode table top_k would build: descending rx per
+    # edge, ties already broken on the lower client index by the sort
+    tbl_e = jnp.where((se < n_edges) & (pos < k), se, n_edges)
+    tbl_p = jnp.minimum(pos, k - 1)
+    srx = jnp.zeros((n_edges, k), rx.dtype).at[tbl_e, tbl_p].set(
+        rx[perm], mode="drop")
+    csum = jnp.cumsum(srx, axis=1)
+    interference = jnp.maximum(csum[:, -1:] - csum, 0.0)
+    sinr = srx / (interference + noise_w)
+    rate = bandwidth_hz * jnp.log2(1.0 + sinr)                   # (M, k)
+    # back to client order: client at sorted slot i sits at table cell
+    # (se[i], pos[i]); unmatched (sentinel) clients rate 0
+    rate_sorted = jnp.where((se < n_edges) & (pos < k),
+                            rate[jnp.minimum(se, n_edges - 1), tbl_p], 0.0)
+    out = jnp.zeros((n,), rate.dtype).at[perm].set(rate_sorted)
+    return jnp.where(matched, out, 0.0)
+
+
 def noise_power_w(noise_dbm_per_hz: float, bandwidth_hz: float) -> float:
     """AWGN power over the band: σ² = N0 · B."""
     return 10.0 ** (noise_dbm_per_hz / 10.0) / 1000.0 * bandwidth_hz

@@ -93,6 +93,31 @@ def _score_kernel(cq_ref, dq_ref, ms_ref, grid_ref, out_ref):
     out_ref[0] = num / den
 
 
+def _score_rows(cq: jnp.ndarray, dq: jnp.ndarray, ms: jnp.ndarray,
+                block_r: int, interp: bool) -> jnp.ndarray:
+    """The fused fuzzy pipeline over flat rows: (R,) cq/dq/ms -> (R,)
+    NO* scores.  Shared by the dense (N·M) and candidate (N·K) callers —
+    the kernel is row-shape-agnostic, only the gather differs."""
+    rows = cq.shape[0]
+    block_r = min(block_r, max(rows, 1))
+    padded = -(-rows // block_r) * block_r
+    flat = [jnp.pad(v, (0, padded - rows)).reshape(1, padded).astype(
+        jnp.float32) for v in (cq, dq, ms)]
+    spec = pl.BlockSpec((1, block_r), lambda i: (0, i))
+    grid_spec = pl.BlockSpec((1, _GRID.size), lambda i: (0, 0))
+    out = pl.pallas_call(
+        _score_kernel,
+        grid=(padded // block_r,),
+        in_specs=[spec, spec, spec, grid_spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((1, padded), jnp.float32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interp,
+    )(*flat, jnp.asarray(_GRID).reshape(1, -1))
+    return out[0, :rows]
+
+
 @functools.partial(jax.jit,
                    static_argnames=("data_max", "block_r", "interpret"))
 def score_matrix(gains: jnp.ndarray, counts: jnp.ndarray,
@@ -109,27 +134,38 @@ def score_matrix(gains: jnp.ndarray, counts: jnp.ndarray,
     cq, dq, ms = fuzzy.normalized_inputs(gains, counts, staleness,
                                          data_max=data_max)
     n, m = cq.shape
-    rows = n * m
-    block_r = min(block_r, max(rows, 1))
-    padded = -(-rows // block_r) * block_r
-    flat = [cq.reshape(-1),
-            jnp.broadcast_to(dq[:, None], (n, m)).reshape(-1),
-            jnp.broadcast_to(ms[:, None], (n, m)).reshape(-1)]
-    flat = [jnp.pad(v, (0, padded - rows)).reshape(1, padded).astype(
-        jnp.float32) for v in flat]
-    spec = pl.BlockSpec((1, block_r), lambda i: (0, i))
-    grid_spec = pl.BlockSpec((1, _GRID.size), lambda i: (0, 0))
-    out = pl.pallas_call(
-        _score_kernel,
-        grid=(padded // block_r,),
-        in_specs=[spec, spec, spec, grid_spec],
-        out_specs=spec,
-        out_shape=jax.ShapeDtypeStruct((1, padded), jnp.float32),
-        compiler_params=_CompilerParams(
-            dimension_semantics=("parallel",)),
-        interpret=interp,
-    )(*flat, jnp.asarray(_GRID).reshape(1, -1))
-    return out[0, :rows].reshape(n, m)
+    flat = _score_rows(cq.reshape(-1),
+                       jnp.broadcast_to(dq[:, None], (n, m)).reshape(-1),
+                       jnp.broadcast_to(ms[:, None], (n, m)).reshape(-1),
+                       block_r, interp)
+    return flat.reshape(n, m)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("data_max", "block_r", "interpret"))
+def score_candidates(gains: jnp.ndarray, cand_idx: jnp.ndarray,
+                     counts: jnp.ndarray, staleness: jnp.ndarray, *,
+                     data_max: float, block_r: int = 512,
+                     interpret: bool | None = None) -> jnp.ndarray:
+    """Gathered-candidate variant of ``score_matrix`` (DESIGN.md §9):
+    drop-in for ``fuzzy.score_candidates`` — (N, K) competency scores for
+    the candidate frontier ``cand_idx`` only.
+
+    Same global Eq. 21 normalisation as the dense kernel (so each score
+    is bit-compatible with the dense matrix entry at the same pair), but
+    the fused Mamdani/CoG kernel sweeps N·K flattened rows instead of
+    N·M — the pruned pairs never reach the kernel grid.
+    """
+    interp = _on_cpu() if interpret is None else interpret
+    cq, dq, ms = fuzzy.normalized_inputs(gains, counts, staleness,
+                                         data_max=data_max)
+    n, k = cand_idx.shape
+    cq_k = jnp.take_along_axis(cq, cand_idx, axis=1)
+    flat = _score_rows(cq_k.reshape(-1),
+                       jnp.broadcast_to(dq[:, None], (n, k)).reshape(-1),
+                       jnp.broadcast_to(ms[:, None], (n, k)).reshape(-1),
+                       block_r, interp)
+    return flat.reshape(n, k)
 
 
 # ---------------------------------------------------------------------------

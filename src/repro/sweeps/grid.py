@@ -75,6 +75,14 @@ class SweepGrid:
     seeds: Sequence[int] = (0,)
     n_rounds: int = 10
     iid: bool = True
+    # (N, K) candidate frontier for every cell (DESIGN.md §9): None =
+    # dense; K ≥ the max in-coverage degree is bit-identical to dense (at
+    # sizes where the dense path runs its sorted SIC), so flipping this on
+    # a sweep changes speed, not results
+    candidates_k: "int | None" = None
+    # dense-path SIC formulation (EngineSpec.sic_impl); the candidate
+    # path's compact SIC is the sorted/top-k formulation regardless
+    sic_impl: str = "auto"
     # per-group DDPG training budget (used when the grid has
     # allocator="ddpg" cells and no pre-trained actor is supplied)
     ddpg_episodes: int = 12
@@ -108,18 +116,23 @@ def expand_grid(grid: SweepGrid) -> List[SweepCell]:
     return cells
 
 
-def _spec_for(cell: SweepCell) -> engine.EngineSpec:
+def _spec_for(cell: SweepCell, candidates_k: "int | None" = None,
+              sic_impl: str = "auto") -> engine.EngineSpec:
     return engine.EngineSpec(policy=cell.policy, allocator=cell.allocator,
                              scheduler=cell.scheduler,
                              noma_enabled=cell.noma_enabled,
-                             scenario=cell.sspec.engine_kind())
+                             scenario=cell.sspec.engine_kind(),
+                             candidates_k=candidates_k, sic_impl=sic_impl)
 
 
-def _group_cells(cells: Sequence[SweepCell]
+def _group_cells(cells: Sequence[SweepCell],
+                 candidates_k: "int | None" = None,
+                 sic_impl: str = "auto"
                  ) -> Dict[engine.EngineSpec, List[SweepCell]]:
     groups: Dict[engine.EngineSpec, List[SweepCell]] = {}
     for cell in cells:
-        groups.setdefault(_spec_for(cell), []).append(cell)
+        groups.setdefault(_spec_for(cell, candidates_k, sic_impl),
+                          []).append(cell)
     return groups
 
 
@@ -154,7 +167,7 @@ def run_sweep(cfg, grid: SweepGrid, *, out_dir: str = "results",
                 "ddpg cells mix static (2N,) and dynamic (3N,) observation "
                 "shapes — one actor cannot serve both; split the grid or "
                 "drop actor_params to train per group")
-    groups = _group_cells(cells)
+    groups = _group_cells(cells, grid.candidates_k, grid.sic_impl)
     sweep_dir = os.path.join(out_dir, f"sweep_{grid.name}")
     if write_json:
         os.makedirs(sweep_dir, exist_ok=True)
@@ -280,6 +293,8 @@ def main(argv=None) -> None:
     ap.add_argument("--out", default="results")
     ap.add_argument("--sharded", action="store_true",
                     help="shard each group's fleet axis over all devices")
+    ap.add_argument("--candidates", type=int, default=None, metavar="K",
+                    help="run every cell on the (N, K) candidate frontier")
     args = ap.parse_args(argv)
 
     cfg = dc.replace(CONFIG, n_clients=32, n_edges=4, min_samples=60,
@@ -290,7 +305,8 @@ def main(argv=None) -> None:
                    "hetero_devices", "full_dynamic"),
         policies=("fcea", "gcea"),
         seeds=(0,) if args.quick else (0, 1),
-        n_rounds=3 if args.quick else 10)
+        n_rounds=3 if args.quick else 10,
+        candidates_k=args.candidates)
     summary = run_sweep(cfg, grid, out_dir=args.out,
                         mesh=engine.fleet_mesh() if args.sharded else None)
     print(json.dumps({k: summary[k] for k in

@@ -1,0 +1,333 @@
+"""The (N, K) candidate frontier (DESIGN.md §9) against the dense paths.
+
+The §9 parity contract: with K ≥ the maximum in-coverage degree the
+candidate pipeline is BIT-IDENTICAL to dense —
+
+* resolver: ``resolve_candidates`` == ``resolve_parallel`` == the numpy
+  oracle (same sweeps, same matching), including tie-heavy and
+  zero-coverage worlds;
+* SIC: ``noma.sic_rates_assigned`` == the dense sorted/top-k
+  ``noma.sic_rates_matrix`` read at the associated pairs;
+* cost: ``cost.round_cost(assigned=...)`` == the dense bill with
+  ``sic_impl="sorted"`` (the at-scale dense path), NOMA and OMA alike;
+* engine: candidate ``run_scanned`` == dense ``run_scanned`` metrics,
+  static and dynamic scenarios.
+
+With K < the coverage degree the candidate market is pruned but still
+FEASIBLE: one edge per client, per-edge quota, only valid (in-coverage,
+available, K-nearest) pairs ever admitted.
+
+Property tests run under hypothesis when installed (CI) and collect as
+skips in the offline container (tests/_hyp.py); the plain fixed-seed
+tests below cover the same corners either way.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp import given, settings, st  # hypothesis or its absent-shim
+
+from repro.configs.hfl_mnist import CONFIG
+from repro.core import association, candidates, cost, engine, fuzzy, noma
+
+CFG = dataclasses.replace(CONFIG, n_clients=24, n_edges=3,
+                          clients_per_edge=3, min_samples=60,
+                          max_samples=120, hidden=16, input_dim=32)
+
+
+def _world(n, m, seed, *, tie_heavy=False, drop_cov=0.0):
+    """A random (dist, pref, coverage) world; ``tie_heavy`` quantises
+    distances and shares one preference vector across edges so multi-edge
+    conflicts and exact ties are constant; ``drop_cov`` knocks clients out
+    of ALL coverage."""
+    rng = np.random.default_rng(seed)
+    if tie_heavy:
+        dist = rng.choice([50.0, 100.0, 150.0], (n, m)).astype(np.float32)
+        pref = np.broadcast_to(
+            rng.permutation(n).astype(np.float32)[:, None], (n, m)).copy()
+        radius = 120.0
+    else:
+        dist = rng.uniform(10.0, 400.0, (n, m)).astype(np.float32)
+        pref = rng.uniform(0.0, 100.0, (n, m)).astype(np.float32)
+        radius = float(rng.uniform(150.0, 400.0))
+    cov = dist <= radius
+    if drop_cov > 0:
+        dead = rng.random(n) < drop_cov
+        cov[dead] = False
+        radius_row = np.where(dead, -1.0, radius)     # not used downstream
+        del radius_row
+    return dist, pref, cov, radius
+
+
+def _dense_assoc(pref, dist, cov, quota):
+    masked = jnp.where(jnp.asarray(cov), jnp.asarray(pref), -jnp.inf)
+    order = jnp.argsort(-masked, axis=0).T
+    return np.asarray(association.resolve_parallel(
+        order, jnp.asarray(dist), quota, jnp.asarray(cov)))
+
+
+def _cand_assoc(pref, dist, cov, radius, quota, k, avail=None):
+    cand = candidates.build_candidates(
+        jnp.asarray(dist), k, coverage_radius_m=radius, avail=avail)
+    pk = candidates.gather(cand, jnp.asarray(pref))
+    assigned = association.resolve_candidates(pk, cand, quota,
+                                              dist.shape[1])
+    return np.asarray(assigned), cand
+
+
+def _check_parity(n, m, quota, seed, *, tie_heavy=False, drop_cov=0.0):
+    dist, pref, cov, radius = _world(n, m, seed, tie_heavy=tie_heavy,
+                                     drop_cov=drop_cov)
+    if drop_cov > 0:
+        # zero-coverage clients enter through the avail mask (the §6 path)
+        avail = jnp.asarray(cov.any(axis=1).astype(np.float32))
+        cov = cov & np.asarray(avail > 0)[:, None]
+    else:
+        avail = None
+    deg = max(int(cov.sum(axis=1).max()), 1) if cov.any() else 1
+    want = _dense_assoc(pref, dist, cov, quota)
+    got, _ = _cand_assoc(pref, dist, cov, radius, quota, deg, avail)
+    np.testing.assert_array_equal(candidates.assigned_one_hot(
+        jnp.asarray(got), m), want)
+    # the numpy oracle agrees too (transitively via test_association, but
+    # pin it directly so a dense regression cannot mask a candidate one)
+    order = np.argsort(-np.where(cov, pref, -np.inf), axis=0,
+                       kind="stable").T
+    np.testing.assert_array_equal(
+        association._resolve(order, dist, quota, cov), want)
+
+
+# ---------------------------------------------------------------------------
+# Resolver parity (K ≥ max coverage degree ⇒ bit-identical)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(2, 24), st.integers(1, 5), st.integers(1, 6),
+       st.integers(0, 10_000))
+def test_resolver_parity_random(n, m, quota, seed):
+    _check_parity(n, m, quota, seed)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 16), st.integers(2, 4), st.integers(1, 4),
+       st.integers(0, 10_000))
+def test_resolver_parity_tie_heavy(n, m, quota, seed):
+    _check_parity(n, m, quota, seed, tie_heavy=True)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(4, 16), st.integers(1, 4), st.integers(1, 4),
+       st.integers(0, 10_000))
+def test_resolver_parity_zero_coverage(n, m, quota, seed):
+    _check_parity(n, m, quota, seed, drop_cov=0.4)
+
+
+def test_resolver_parity_fixed_corners():
+    """The same corners as plain tests, so the offline container (no
+    hypothesis) still exercises every branch."""
+    for seed in range(8):
+        _check_parity(12, 3, 2, seed)
+        _check_parity(10, 4, 3, seed, tie_heavy=True)
+        _check_parity(12, 2, 2, seed, drop_cov=0.5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(4, 20), st.integers(2, 5), st.integers(1, 4),
+       st.integers(1, 3), st.integers(0, 10_000))
+def test_small_k_degrades_gracefully(n, m, quota, k, seed):
+    _check_small_k(n, m, quota, k, seed)
+
+
+def _check_small_k(n, m, quota, k, seed):
+    """K below the coverage degree: the admitted set must stay feasible
+    and every admitted pair must be valid (in-coverage, K-nearest)."""
+    dist, pref, cov, radius = _world(n, m, seed)
+    k = min(k, m)
+    got, cand = _cand_assoc(pref, dist, cov, radius, quota, k)
+    one = np.asarray(candidates.assigned_one_hot(jnp.asarray(got), m))
+    assert (one.sum(axis=1) <= 1).all()
+    assert (one.sum(axis=0) <= quota).all()
+    idx, valid = np.asarray(cand.idx), np.asarray(cand.valid)
+    for c in np.nonzero(got >= 0)[0]:
+        slot = np.nonzero(idx[c] == got[c])[0]
+        assert slot.size == 1 and valid[c, slot[0]]
+        assert dist[c, got[c]] <= radius
+
+
+def test_small_k_fixed_corners():
+    for seed in range(6):
+        _check_small_k(16, 4, 2, 1, seed)
+        _check_small_k(16, 4, 2, 2, seed)
+
+
+def test_build_candidates_row_order():
+    """idx rows are (distance, edge index)-sorted — the strict client
+    preference order the resolver's first-minimum argmin relies on."""
+    dist = jnp.asarray([[3.0, 1.0, 2.0, 1.0],
+                        [5.0, 5.0, 5.0, 5.0]], jnp.float32)
+    cand = candidates.build_candidates(dist, 4, coverage_radius_m=4.0)
+    np.testing.assert_array_equal(np.asarray(cand.idx),
+                                  [[1, 3, 2, 0], [0, 1, 2, 3]])
+    np.testing.assert_array_equal(np.asarray(cand.valid),
+                                  [[True, True, True, True], [False] * 4])
+    assert np.asarray(cand.dist).shape == (2, 4)
+
+
+def test_fcea_candidate_scores_match_dense_gather():
+    rng = np.random.default_rng(5)
+    n, m, k = 20, 4, 2
+    gains = jnp.asarray(rng.uniform(1e-12, 1e-8, (n, m)).astype(np.float32))
+    counts = jnp.asarray(rng.integers(60, 120, n).astype(np.float32))
+    stale = jnp.asarray(rng.integers(0, 5, n).astype(np.int32))
+    dist = jnp.asarray(rng.uniform(10, 400, (n, m)).astype(np.float32))
+    cand = candidates.build_candidates(dist, k, coverage_radius_m=300.0)
+    dense = fuzzy.score_matrix(gains, counts, stale, data_max=120.0)
+    got = fuzzy.score_candidates(gains, cand, counts, stale, data_max=120.0)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(candidates.gather(cand, dense)))
+
+
+def test_dense_scores_rejected_by_candidate_association():
+    """The (N, M)-shaped dense matrix is ambiguous at K = M — the API
+    must refuse it rather than silently double-gather."""
+    rng = np.random.default_rng(0)
+    n, m = 8, 3
+    dist = jnp.asarray(rng.uniform(10, 400, (n, m)).astype(np.float32))
+    cand = candidates.build_candidates(dist, 2, coverage_radius_m=500.0)
+    with pytest.raises(ValueError, match="frontier"):
+        association.associate_candidates(
+            "fcea", scores=jnp.zeros((n, m)), gains=jnp.ones((n, m)),
+            cand=cand, quota=2, key=jax.random.key(0), n_edges=m)
+
+
+# ---------------------------------------------------------------------------
+# SIC + cost parity
+# ---------------------------------------------------------------------------
+
+def _assigned_world(n, m, quota, seed):
+    rng = np.random.default_rng(seed)
+    gains = jnp.asarray(rng.uniform(1e-12, 1e-8, (n, m)).astype(np.float32))
+    power = jnp.asarray(rng.uniform(0.05, 0.5, n).astype(np.float32))
+    # a feasible assignment respecting the quota (some clients unmatched)
+    assigned = np.full(n, -1, np.int64)
+    slots = [q for e in range(m) for q in [e] * quota]
+    picks = rng.permutation(n)[:min(len(slots), int(n * 0.8))]
+    for i, c in enumerate(picks):
+        assigned[c] = slots[i]
+    assigned = jnp.asarray(assigned, jnp.int32)
+    return gains, power, assigned
+
+
+def _check_sic_parity(n, m, quota, seed):
+    gains, power, assigned = _assigned_world(n, m, quota, seed)
+    mask = np.asarray(candidates.assigned_one_hot(assigned, m)) > 0
+    dense = noma.sic_rates_matrix(power, gains, jnp.asarray(mask),
+                                  bandwidth_hz=CFG.bandwidth_hz,
+                                  noise_w=1e-13, max_per_edge=quota)
+    own_gain = candidates.own_edge_gather(assigned, gains)
+    got = noma.sic_rates_assigned(power, own_gain, assigned, n_edges=m,
+                                  max_per_edge=quota,
+                                  bandwidth_hz=CFG.bandwidth_hz,
+                                  noise_w=1e-13)
+    want = np.asarray(jnp.sum(dense * mask, axis=1))
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 32), st.integers(1, 5), st.integers(1, 6),
+       st.integers(0, 10_000))
+def test_sic_assigned_matches_dense_sorted(n, m, quota, seed):
+    _check_sic_parity(n, m, quota, seed)
+
+
+def test_sic_assigned_fixed_corners():
+    for seed in range(8):
+        _check_sic_parity(24, 3, 3, seed)
+        _check_sic_parity(6, 2, 5, seed)       # quota ≥ N: full-sort branch
+        _check_sic_parity(4, 1, 2, seed)
+
+
+@pytest.mark.parametrize("noma_enabled", [True, False])
+def test_round_cost_assigned_matches_dense(noma_enabled):
+    """The full Eq. 23a bill: compact == dense-sorted, bit for bit."""
+    for seed in range(5):
+        n, m, quota = 24, 3, 3
+        gains, power, assigned = _assigned_world(n, m, quota, seed)
+        rng = np.random.default_rng(seed + 100)
+        f_hz = jnp.asarray(rng.uniform(CFG.f_min_hz, CFG.f_max_hz,
+                                       n).astype(np.float32))
+        counts = jnp.asarray(rng.integers(60, 120, n).astype(np.float32))
+        z = jnp.asarray(rng.integers(0, 2, m).astype(np.float32))
+        assoc = candidates.assigned_one_hot(assigned, m).astype(jnp.float32)
+        dense = cost.round_cost(CFG, power_w=power, f_hz=f_hz, gains=gains,
+                                assoc=assoc, z=z, n_samples=counts,
+                                noma_enabled=noma_enabled,
+                                sic_impl="sorted", sic_max_per_edge=quota)
+        got = cost.round_cost(CFG, power_w=power, f_hz=f_hz, gains=gains,
+                              assoc=assoc, z=z, n_samples=counts,
+                              noma_enabled=noma_enabled,
+                              sic_max_per_edge=quota, assigned=assigned)
+        for field in dense._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(dense, field)),
+                np.asarray(getattr(got, field)), err_msg=field)
+
+
+def test_round_cost_assigned_requires_bound():
+    with pytest.raises(ValueError, match="sic_max_per_edge"):
+        cost.round_cost(CFG, power_w=jnp.ones(4), f_hz=jnp.ones(4),
+                        gains=jnp.ones((4, 2)), assoc=jnp.zeros((4, 2)),
+                        z=jnp.ones(2), n_samples=jnp.ones(4),
+                        assigned=jnp.zeros(4, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Engine end-to-end parity (the whole round pipeline, scanned)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", ["fcea", "gcea", "rcea"])
+def test_engine_candidate_matches_dense_static(policy):
+    state, bundle, _ = engine.init_simulation(CFG, seed=0)
+    dense = engine.EngineSpec(policy=policy, scheduler="fastest",
+                              sic_impl="sorted")
+    candi = dataclasses.replace(dense, candidates_k=CFG.n_edges)
+    _, md = engine.run_scanned(CFG, dense, state, bundle, 3)
+    _, mc = engine.run_scanned(CFG, candi, state, bundle, 3)
+    for f in md._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(md, f)),
+                                      np.asarray(getattr(mc, f)),
+                                      err_msg=f"{policy}:{f}")
+
+
+def test_engine_candidate_matches_dense_dynamic():
+    state, bundle, _ = engine.init_simulation(CFG, seed=1,
+                                              scenario="full_dynamic")
+    dense = engine.EngineSpec(policy="fcea", scheduler="fastest",
+                              sic_impl="sorted", scenario="dynamic")
+    candi = dataclasses.replace(dense, candidates_k=CFG.n_edges)
+    _, md = engine.run_scanned(CFG, dense, state, bundle, 3)
+    _, mc = engine.run_scanned(CFG, candi, state, bundle, 3)
+    for f in md._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(md, f)),
+                                      np.asarray(getattr(mc, f)),
+                                      err_msg=f)
+
+
+def test_engine_small_k_runs_and_is_feasible():
+    state, bundle, _ = engine.init_simulation(CFG, seed=0)
+    spec = engine.EngineSpec(policy="fcea", scheduler="fastest",
+                             candidates_k=1)
+    assoc = np.asarray(engine.associate_snapshot(CFG, spec, state, bundle))
+    assert (assoc.sum(axis=1) <= 1).all()
+    assert (assoc.sum(axis=0) <= CFG.clients_per_edge).all()
+    _, ms = engine.run_scanned(CFG, spec, state, bundle, 2)
+    assert np.isfinite(np.asarray(ms.cost)).all()
+
+
+def test_max_coverage_degree_helper():
+    dist = np.asarray([[1.0, 2.0, 9.0], [9.0, 9.0, 9.0], [1.0, 1.0, 1.0]])
+    assert candidates.max_coverage_degree(dist, 5.0) == 3
+    avail = np.asarray([1.0, 1.0, 0.0])
+    assert candidates.max_coverage_degree(dist, 5.0, avail) == 2

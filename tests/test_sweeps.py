@@ -198,6 +198,48 @@ def test_render_tables_sweep_mode(tmp_path):
     assert "±" in report
 
 
+def test_sweep_candidates_k_matches_dense():
+    """A sweep on the (N, K ≥ degree) frontier bills identical metrics —
+    flipping ``candidates_k`` changes speed, not results (DESIGN.md §9)."""
+    import dataclasses as dc
+    grid = _grid(scenarios=("static", "markov_dropout"), policies=("fcea",),
+                 schedulers=("fastest",), seeds=(0,))
+    # the compact SIC is the sorted formulation — pin the dense cells to
+    # it so the bills compare bit-for-bit at this (tiny) N too
+    grid = dc.replace(grid, sic_impl="sorted")
+    dense = sweeps.run_sweep(SMALL, grid, write_json=False)
+    kgrid = dc.replace(grid, candidates_k=SMALL.n_edges)
+    cand = sweeps.run_sweep(SMALL, kgrid, write_json=False)
+    assert dense["cells"].keys() == cand["cells"].keys()
+    for cid in dense["cells"]:
+        for metric in ("accuracy", "cost", "n_associated"):
+            np.testing.assert_array_equal(
+                np.asarray(dense["cells"][cid][metric]),
+                np.asarray(cand["cells"][cid][metric]),
+                err_msg=f"{cid}:{metric}")
+
+
+def test_render_tables_plot_mode(tmp_path):
+    """``plot`` mode writes one PNG per metric from the per-cell
+    trajectory files next to summary.json (the Figs. 8-12 figure view)."""
+    import importlib.util
+    pytest.importorskip("matplotlib")
+    grid = _grid(scenarios=("static", "markov_dropout"), policies=("gcea",),
+                 schedulers=("fastest",), seeds=(0, 1))
+    sweeps.run_sweep(SMALL, grid, out_dir=str(tmp_path))
+    path = os.path.join(os.path.dirname(__file__), "..", "results",
+                        "render_tables.py")
+    spec = importlib.util.spec_from_file_location("render_tables", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    out = mod.plot_report(os.path.join(str(tmp_path), "sweep_t"),
+                          str(tmp_path / "figs"))
+    assert len(out) == 2                      # accuracy + cost panels
+    for p in out:
+        assert os.path.exists(p) and os.path.getsize(p) > 0
+        assert p.endswith(".png")
+
+
 def test_same_seed_same_data_across_scenarios():
     """Scenario draws happen after topology+data: the federation is
     identical under every scenario, so sweep columns are comparable."""
