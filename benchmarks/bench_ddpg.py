@@ -26,7 +26,7 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, provenance
 from repro.configs.hfl_mnist import CONFIG
 from repro.core import ddpg, engine
 
@@ -108,6 +108,7 @@ def main(argv=None) -> None:
     }
     emit(f"ddpg_trainer_n{n}_m{m}", 1e6 * scanned_s / total_steps, record)
 
+    record["provenance"] = provenance()
     with open(OUT, "w") as fh:
         json.dump(record, fh, indent=2)
     print(f"wrote {os.path.normpath(OUT)}")

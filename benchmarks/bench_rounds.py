@@ -16,7 +16,10 @@ Each size also records ``serial_rps`` — the scanned driver with the legacy
 serial association resolver + pairwise SIC (``EngineSpec(resolver="serial",
 sic_impl="pairwise")``) — the A/B for the PR-4 hot-path work — and a
 per-stage breakdown (associate / allocate / schedule / train / eval, each
-jitted separately, best-of-k) so a regression is attributable to a stage.
+jitted separately, median-of-k like the driver timings) so a regression is
+attributable to a stage.  The 1024×16 rung additionally records the
+telemetry-enabled scanned driver (``EngineSpec(telemetry=True)``) and its
+overhead percentage — the acceptance number for the in-scan trace.
 
 At the scaling-tail sizes a K-SWEEP column compares the dense (N, M)
 round against the (N, K) candidate frontier (``EngineSpec.candidates_k``,
@@ -45,7 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, median_rps
+from benchmarks.common import emit, median_ms, median_rps, provenance
 from repro.configs.hfl_mnist import CONFIG
 from repro.core import (aggregation, association, cost, engine, fuzzy, noma,
                         pdd)
@@ -167,17 +170,6 @@ class LegacyEagerSim:
         return acc
 
 
-def _best_ms(fn, *args, repeats: int = 5) -> float:
-    """Best-of-k wall time of a compiled callable, in ms."""
-    jax.block_until_ready(fn(*args))                  # compile + warm
-    best = float("inf")
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        best = min(best, time.perf_counter() - t0)
-    return best * 1e3
-
-
 def stage_breakdown(cfg, state, bundle, spec=SPEC) -> Dict[str, float]:
     """Per-stage ms for one round's pieces, each jitted separately on the
     init state — the attribution view behind the scanned rounds/sec.
@@ -223,13 +215,13 @@ def stage_breakdown(cfg, state, bundle, spec=SPEC) -> Dict[str, float]:
                                  model.loss(gp, (bundle.test_x,
                                                  bundle.test_y))))
     return {
-        "associate_ms": round(_best_ms(f_assoc, state.gains,
-                                       state.staleness), 3),
-        "allocate_ms": round(_best_ms(f_alloc, assoc, state.gains), 3),
-        "schedule_ms": round(_best_ms(f_sched, p, f, state.gains, assoc,
-                                      assigned), 3),
-        "train_ms": round(_best_ms(f_train, state, assoc), 3),
-        "eval_ms": round(_best_ms(f_eval, state.global_params), 3),
+        "associate_ms": round(median_ms(f_assoc, state.gains,
+                                        state.staleness), 3),
+        "allocate_ms": round(median_ms(f_alloc, assoc, state.gains), 3),
+        "schedule_ms": round(median_ms(f_sched, p, f, state.gains, assoc,
+                                       assigned), 3),
+        "train_ms": round(median_ms(f_train, state, assoc), 3),
+        "eval_ms": round(median_ms(f_eval, state.global_params), 3),
     }
 
 
@@ -264,6 +256,17 @@ def bench_size(n: int, m: int, *, eager_rounds: int, scan_rounds: int,
         lambda: engine.run_scanned(cfg, SPEC, state, bundle, scan_rounds),
         scan_rounds)
     out["scanned_rps"] = round(scanned_rps, 3)
+
+    # -- telemetry-enabled scanned driver: the in-scan RoundTrace rides the
+    #    scan outputs; its overhead at 1024×16 is the acceptance number
+    if (n, m) == (1024, 16):
+        spec_t = dataclasses.replace(SPEC, telemetry=True)
+        t_rps = median_rps(
+            lambda: engine.run_scanned(cfg, spec_t, state, bundle,
+                                       scan_rounds), scan_rounds)
+        out["telemetry_rps"] = round(t_rps, 3)
+        out["telemetry_overhead_pct"] = round(
+            (scanned_rps / t_rps - 1.0) * 100.0, 2)
 
     # -- A/B: the legacy serial resolver + pairwise SIC, same driver ---------
     if with_eager:     # the pairwise SIC shares eager's memory wall
@@ -333,7 +336,10 @@ def main(argv=None) -> None:
               if k not in ("stages", "candidates")})
 
     with open(OUT, "w") as fh:
-        json.dump({"spec": dataclasses.asdict(SPEC), "results": results},
+        json.dump({"spec": dataclasses.asdict(SPEC),
+                   "provenance": provenance(),
+                   "timing_stat": "median_of_k",
+                   "results": results},
                   fh, indent=2)
     print(f"wrote {os.path.normpath(OUT)}")
 

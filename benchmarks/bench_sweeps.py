@@ -22,9 +22,7 @@ import os
 import time
 from typing import Dict
 
-import jax
-
-from benchmarks.common import emit
+from benchmarks.common import emit, median_rps, provenance
 from repro import sweeps
 from repro.configs.hfl_mnist import CONFIG
 from repro.core import engine
@@ -41,27 +39,11 @@ def _cfg():
                                local_batch=16)
 
 
-def _median_rps(fn, rounds: int, repeats: int) -> float:
-    """Median-of-k rounds/sec of an already-compiled driver call.
-
-    Single-shot timings made the recorded dynamic overhead NEGATIVE
-    (−5.4 % in the PR-2/3 trajectory): at ~0.3 s per run, scheduler and
-    allocator jitter between the two one-shot measurements exceeded the
-    real ~1-2 % transition cost.  The median over k runs per path makes
-    the differenced number meaningful.
-    """
-    samples = []
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn())
-        samples.append(rounds / (time.perf_counter() - t0))
-    samples.sort()
-    return samples[len(samples) // 2]
-
-
 def bench_engine_overhead(rounds: int, repeats: int) -> Dict[str, float]:
     """static vs dynamic round_step throughput, same compiled-scan driver,
-    median of ``repeats`` timed runs per path."""
+    median of ``repeats`` timed runs per path (``common.median_rps`` —
+    single-shot timings once recorded a NEGATIVE −5.4 % dynamic overhead
+    from pure scheduler jitter)."""
     cfg = _cfg()
     out: Dict[str, float] = {}
     for label, scenario, kind in (("static", None, "static"),
@@ -71,8 +53,8 @@ def bench_engine_overhead(rounds: int, repeats: int) -> Dict[str, float]:
         state, bundle, _ = engine.init_simulation(cfg, seed=0,
                                                   scenario=scenario)
         run = lambda: engine.run_scanned(cfg, spec, state, bundle, rounds)
-        jax.block_until_ready(run())                  # compile + warm
-        out[f"{label}_rps"] = round(_median_rps(run, rounds, repeats), 3)
+        out[f"{label}_rps"] = round(
+            median_rps(run, rounds, repeats=repeats), 3)
     out["dynamic_overhead_pct"] = round(
         100.0 * (out["static_rps"] / max(out["dynamic_rps"], 1e-9) - 1.0), 2)
     out["rounds"] = rounds
@@ -126,7 +108,9 @@ def main(argv=None) -> None:
     emit("sweeps_fleet_3x2", 1e6 / fleet["fleet_rps"], fleet)
 
     with open(OUT, "w") as fh:
-        json.dump({"size": [N, M], "engine": overhead, "fleet": fleet},
+        json.dump({"size": [N, M], "provenance": provenance(),
+                   "timing_stat": "median_of_k",
+                   "engine": overhead, "fleet": fleet},
                   fh, indent=2)
     print(f"wrote {os.path.normpath(OUT)}")
 

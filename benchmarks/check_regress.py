@@ -1,0 +1,119 @@
+"""Perf-regression gate: a fresh quick bench vs the committed baseline.
+
+Re-measures the scanned round-engine driver (``engine.run_scanned`` with
+``bench_rounds.SPEC``) at the quick sizes and compares each size's
+rounds/sec against the ``scanned_rps`` recorded in the committed
+``BENCH_rounds.json``.  A size REGRESSES when
+
+    fresh_rps < committed_rps * (1 - tol/100)
+
+and any regression exits non-zero — the CI perf-smoke step.  Faster is
+never a failure (an improved number just means the baseline should be
+re-recorded by ``bench_rounds``).
+
+The committed baseline carries provenance (host, backend, jax version);
+a CI runner is a DIFFERENT machine from the recording host, so the CI
+invocation uses a deliberately generous ``--tol`` — the gate catches
+order-of-magnitude structural regressions (a retrace per round, a host
+sync inside the scan), not single-digit drift.  Writes its verdict to
+``results/check_regress.json``.
+
+  PYTHONPATH=src python -m benchmarks.check_regress --quick --tol 75
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict
+
+from benchmarks import bench_rounds
+from benchmarks.common import median_rps, provenance
+from repro.core import engine
+
+BENCH = os.path.join(os.path.dirname(__file__), "..", "BENCH_rounds.json")
+OUT = os.path.join(os.path.dirname(__file__), "..", "results",
+                   "check_regress.json")
+
+QUICK_SIZES = ((64, 4), (256, 8))
+FULL_SIZES = bench_rounds.SIZES                 # adds (1024, 16)
+
+
+def fresh_scanned_rps(n: int, m: int, rounds: int) -> float:
+    """The scanned driver's median rounds/sec at (n, m) — the same spec,
+    config shape and statistic ``bench_rounds`` records."""
+    cfg = bench_rounds._cfg(n, m)
+    state, bundle, _ = engine.init_simulation(cfg, seed=0)
+    return median_rps(
+        lambda: engine.run_scanned(cfg, bench_rounds.SPEC, state, bundle,
+                                   rounds), rounds)
+
+
+def check(bench_path: str = BENCH, tol_pct: float = 30.0,
+          quick: bool = False, rounds: int = 5) -> Dict:
+    with open(bench_path) as fh:
+        committed = json.load(fh)
+    sizes = QUICK_SIZES if quick else FULL_SIZES
+    report = {
+        "tol_pct": tol_pct,
+        "baseline_provenance": committed.get("provenance"),
+        "provenance": provenance(),
+        "sizes": {},
+        "regressed": [],
+    }
+    for n, m in sizes:
+        key = f"{n}x{m}"
+        base = committed.get("results", {}).get(key, {}).get("scanned_rps")
+        if base is None:
+            report["sizes"][key] = {"status": "no-baseline"}
+            continue
+        fresh = fresh_scanned_rps(n, m, rounds)
+        floor = base * (1.0 - tol_pct / 100.0)
+        ok = fresh >= floor
+        report["sizes"][key] = {
+            "committed_rps": base,
+            "fresh_rps": round(fresh, 3),
+            "floor_rps": round(floor, 3),
+            "ratio": round(fresh / base, 3),
+            "status": "ok" if ok else "REGRESSED",
+        }
+        if not ok:
+            report["regressed"].append(key)
+        print(f"{key}: fresh {fresh:.2f} rps vs committed {base:.2f} "
+              f"(floor {floor:.2f}) -> "
+              f"{report['sizes'][key]['status']}", flush=True)
+    report["ok"] = not report["regressed"]
+    return report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", default=BENCH,
+                    help="committed baseline JSON (default: BENCH_rounds"
+                         ".json at the repo root)")
+    ap.add_argument("--tol", type=float, default=30.0,
+                    help="allowed slowdown in percent before failing")
+    ap.add_argument("--quick", action="store_true",
+                    help="small sizes only (CI-speed)")
+    ap.add_argument("--rounds", type=int, default=5,
+                    help="scan length per timed driver call")
+    ap.add_argument("--out", default=OUT,
+                    help="verdict JSON path")
+    args = ap.parse_args(argv)
+
+    report = check(args.bench, args.tol, args.quick, args.rounds)
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    with open(args.out, "w") as fh:
+        json.dump(report, fh, indent=2)
+    print(f"wrote {os.path.normpath(args.out)}")
+    if not report["ok"]:
+        print(f"PERF REGRESSION: {', '.join(report['regressed'])} fell "
+              f"more than {args.tol}% below the committed baseline")
+        return 1
+    print("no perf regression")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

@@ -1,7 +1,12 @@
-"""Shared benchmark plumbing: CSV emission + the paper's simulation configs."""
+"""Shared benchmark plumbing: CSV emission, timing statistics, provenance
+stamping and the paper's simulation configs."""
 from __future__ import annotations
 
 import dataclasses
+import datetime
+import os
+import platform
+import subprocess
 import time
 from typing import Callable, Dict, List
 
@@ -51,3 +56,45 @@ def median_rps(fn: Callable, rounds: int, repeats: int = 3,
         samples.append(rounds / (time.perf_counter() - t0))
     samples.sort()
     return samples[len(samples) // 2]
+
+
+def median_ms(fn: Callable, *args, repeats: int = 5) -> float:
+    """Median-of-k wall time of a compiled callable, in ms (warm first).
+
+    THE stage/driver timing statistic for every BENCH_*.json — stage
+    breakdowns used to record best-of-k while driver timings recorded
+    median-of-k, which made stage sums incomparable to driver totals.
+    """
+    import jax
+    jax.block_until_ready(fn(*args))                  # compile + warm
+    samples = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        samples.append(time.perf_counter() - t0)
+    samples.sort()
+    return samples[len(samples) // 2] * 1e3
+
+
+def provenance() -> Dict[str, object]:
+    """Recording-host identity stamped into every BENCH_*.json so the
+    perf trajectory stays interpretable across machines: git sha, jax
+    version, backend, device count, platform, ISO timestamp."""
+    import jax
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__))).stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        sha = ""
+    return {
+        "git_sha": sha or None,
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "timestamp": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+    }

@@ -5,11 +5,14 @@ Trains the DDPG resource allocator with the pure scanned driver
 on the ``full_dynamic`` preset — moving clients, Markov dropout,
 heterogeneous devices — and benchmarks it against the ``mid`` and ``rra``
 allocators through the sweep grid.  The ddpg group trains its own actor
-on the (3N,) scenario-sliced observation; every cell's trajectory and the
-final comparison land under ``results/sweep_ddpg/``.
+on the (3N,) scenario-sliced observation; every cell's trajectory, its
+per-round telemetry trace (``<cell>.trace.json`` — the Eq. 23a cost
+decomposition the DDPG reward optimises, split by stage) and the final
+comparison land under ``results/sweep_ddpg/``.
 
   PYTHONPATH=src python examples/ddpg_sweep.py [--rounds 12] [--seeds 2]
                                                [--episodes 30]
+                                               [--no-telemetry]
 """
 import argparse
 import dataclasses
@@ -28,6 +31,8 @@ def main() -> int:
                     help="DDPG training episodes (40 steps each)")
     ap.add_argument("--name", default="ddpg")
     ap.add_argument("--out", default="results")
+    ap.add_argument("--no-telemetry", action="store_true",
+                    help="skip the per-cell RoundTrace JSON")
     args = ap.parse_args()
 
     cfg = dataclasses.replace(CONFIG, n_clients=32, n_edges=4,
@@ -41,7 +46,8 @@ def main() -> int:
         seeds=tuple(range(args.seeds)),
         n_rounds=args.rounds,
         ddpg_episodes=args.episodes, ddpg_steps=40,
-        ddpg_warmup=64, ddpg_hidden=64)
+        ddpg_warmup=64, ddpg_hidden=64,
+        telemetry=not args.no_telemetry)
     summary = sweeps.run_sweep(cfg, grid, out_dir=args.out)
 
     by_alloc = {}

@@ -1,12 +1,16 @@
-"""Render EXPERIMENTS.md tables from the dry-run jsonl records, and the
+"""Render EXPERIMENTS.md tables from the dry-run jsonl records, the
 paper's Figs. 8-12-style cost/accuracy comparisons from sweep summaries —
-as markdown tables (``sweep``) or matplotlib panels (``plot``).
+as markdown tables (``sweep``) or matplotlib panels (``plot``) — and the
+telemetry RoundTrace views (``trace`` / ``traceplot``).
 
   python results/render_tables.py dryrun  results/dryrun.jsonl
   python results/render_tables.py roofline results/dryrun.jsonl
   python results/render_tables.py sweep   results/sweep_showcase
   python results/render_tables.py sweep   'results/sweep_*'     # glob ok
   python results/render_tables.py plot    results/sweep_showcase [out_dir]
+  python results/render_tables.py trace   results/sweep_demo    # *.trace.json
+  python results/render_tables.py trace   trace.jsonl           # sink file
+  python results/render_tables.py traceplot results/sweep_demo [out_dir]
 
 ``sweep`` accepts a sweep directory, its summary.json path, or a glob of
 either; each summary renders one table per metric (final accuracy, mean
@@ -18,6 +22,14 @@ scheduler/NOMA), mean ± spread over seeds — the Figs. 8-12 protocol view.
 mean over seeds with a ±std band — the figure view of the same protocol.
 The per-round trajectories come from the per-cell JSON files next to each
 summary.json (``run_sweep`` writes both).
+
+``trace`` accepts a ``*.trace.json`` written by the sweep runner, a
+``JsonlSink`` file streamed out of a driver, a sweep directory, or a glob
+of any of those; each source renders one per-round markdown table of the
+Eq. 23a cost decomposition (local / NOMA-uplink / edge→cloud, time and
+energy) plus the association (deferred-acceptance sweeps, per-edge load),
+scheduler (PDD iterations + residual) and SIC-depth internals.
+``traceplot`` writes the same decomposition as a 4-panel PNG per source.
 """
 import glob as _glob
 import json
@@ -257,6 +269,130 @@ def sweep_plots(summary, sweep_dir, out_dir):
     return written
 
 
+# ---------------------------------------------------------------------------
+# Telemetry RoundTrace -> per-stage cost-decomposition tables / panels
+# ---------------------------------------------------------------------------
+
+def _load_trace(path):
+    """A trace source -> {leaf: per-round list}.  Accepts the sweep
+    runner's ``*.trace.json`` (trace under a "trace" key) and a JSONL
+    sink file (one object per round; re-sorted by round)."""
+    if path.endswith(".jsonl"):
+        rows = [json.loads(l) for l in open(path) if l.strip()]
+        if not rows:
+            return {}
+        rows.sort(key=lambda r: r.get("round", 0))
+        return {k: [r[k] for r in rows] for k in rows[0]}
+    with open(path) as fh:
+        data = json.load(fh)
+    return data.get("trace", data)
+
+
+def _iter_traces(path):
+    """Yield (label, trace dict) from a file / sweep dir / glob."""
+    matches = sorted(_glob.glob(path)) or [path]
+    for p in matches:
+        if os.path.isdir(p):
+            for f in sorted(_glob.glob(os.path.join(p, "*.trace.json"))):
+                label = os.path.basename(f)[:-len(".trace.json")]
+                yield label, _load_trace(f)
+            continue
+        if os.path.exists(p):
+            label = os.path.basename(p)
+            for suf in (".trace.json", ".jsonl", ".json"):
+                if label.endswith(suf):
+                    label = label[:-len(suf)]
+                    break
+            yield label, _load_trace(p)
+
+
+def trace_table(label, tr):
+    """One per-round markdown table: the Eq. 23a decomposition by term +
+    association/scheduler/SIC internals."""
+    rounds = tr.get("round", [])
+    out = [f"## trace `{label}` — {len(rounds)} rounds", ""]
+    out.append("| round | t_local s | t_uplink s | t_cloud s | "
+               "e_local J | e_uplink J | e_cloud J | sweeps | "
+               "edge load | pdd it | residual | sic |")
+    out.append("|" + "---|" * 12)
+    for i, r in enumerate(rounds):
+        load = tr["edge_load"][i]
+        load_s = (f"{min(load)}–{max(load)}" if len(load) > 4
+                  else "/".join(str(v) for v in load))
+        out.append(
+            f"| {r} | {tr['time_local_s'][i]:.4f} | "
+            f"{tr['time_uplink_s'][i]:.4f} | {tr['time_cloud_s'][i]:.4f} | "
+            f"{tr['energy_local_j'][i]:.4f} | "
+            f"{tr['energy_uplink_j'][i]:.4f} | "
+            f"{tr['energy_cloud_j'][i]:.4f} | {tr['assoc_sweeps'][i]} | "
+            f"{load_s} | {tr['pdd_iters'][i]} | "
+            f"{tr['pdd_residual'][i]:.2e} | {tr['sic_depth'][i]} |")
+    return "\n".join(out)
+
+
+def trace_report(path):
+    parts = [trace_table(label, tr) for label, tr in _iter_traces(path)
+             if tr]
+    if not parts:
+        raise SystemExit(f"no trace JSON/JSONL found under {path!r}")
+    return "\n\n".join(parts)
+
+
+def trace_plots(path, out_dir=None):
+    """One 4-panel PNG per trace source: time decomposition, energy
+    decomposition, association sweeps + SIC depth, PDD convergence."""
+    import matplotlib
+    matplotlib.use("Agg")
+    import matplotlib.pyplot as plt
+
+    written = []
+    for label, tr in _iter_traces(path):
+        if not tr:
+            continue
+        r = tr["round"]
+        fig, axes = plt.subplots(2, 2, figsize=(9, 6.4), sharex=True)
+        ax = axes[0][0]
+        for k, lab in (("time_local_s", "local compute"),
+                       ("time_uplink_s", "NOMA uplink"),
+                       ("time_cloud_s", "edge→cloud")):
+            ax.plot(r, tr[k], label=lab, lw=1.6)
+        ax.set_ylabel("time (s)"); ax.legend(fontsize=7)
+        ax = axes[0][1]
+        for k, lab in (("energy_local_j", "local compute"),
+                       ("energy_uplink_j", "NOMA uplink"),
+                       ("energy_cloud_j", "edge→cloud")):
+            ax.plot(r, tr[k], label=lab, lw=1.6)
+        ax.set_ylabel("energy (J)"); ax.legend(fontsize=7)
+        ax = axes[1][0]
+        ax.plot(r, tr["assoc_sweeps"], label="DA sweeps", lw=1.6)
+        ax.plot(r, tr["sic_depth"], label="SIC depth", lw=1.6)
+        ax.set_ylabel("count"); ax.set_xlabel("global round")
+        ax.legend(fontsize=7)
+        ax = axes[1][1]
+        ax.plot(r, tr["pdd_iters"], label="PDD iters", lw=1.6)
+        ax2 = ax.twinx()
+        ax2.semilogy([x for x in r],
+                     [max(v, 1e-12) for v in tr["pdd_residual"]],
+                     color="C3", label="residual", lw=1.2)
+        ax.set_ylabel("PDD iterations"); ax2.set_ylabel("residual")
+        ax.set_xlabel("global round"); ax.legend(fontsize=7, loc="upper left")
+        for row in axes:
+            for a in row:
+                a.grid(True, alpha=0.3)
+        fig.suptitle(f"round trace `{label}`", fontsize=11)
+        fig.tight_layout(rect=(0, 0, 1, 0.96))
+        dest = out_dir or (path if os.path.isdir(path)
+                           else os.path.dirname(path) or ".")
+        os.makedirs(dest, exist_ok=True)
+        out = os.path.join(dest, f"trace_{label}.png")
+        fig.savefig(out, dpi=130)
+        plt.close(fig)
+        written.append(out)
+    if not written:
+        raise SystemExit(f"no trace JSON/JSONL found under {path!r}")
+    return written
+
+
 def plot_report(path, out_dir=None):
     written = []
     for summary, sweep_dir in _iter_summaries(path, with_dir=True):
@@ -274,6 +410,12 @@ if __name__ == "__main__":
         print(sweep_report(path))
     elif kind == "plot":
         for p in plot_report(path, sys.argv[3] if len(sys.argv) > 3
+                             else None):
+            print(f"wrote {p}")
+    elif kind == "trace":
+        print(trace_report(path))
+    elif kind == "traceplot":
+        for p in trace_plots(path, sys.argv[3] if len(sys.argv) > 3
                              else None):
             print(f"wrote {p}")
     else:

@@ -137,13 +137,16 @@ def rcea(rng: np.random.Generator, dist: np.ndarray, quota: int,
 # ---------------------------------------------------------------------------
 
 def resolve_jax(order: jnp.ndarray, dist: jnp.ndarray, quota: int,
-                coverage: jnp.ndarray) -> jnp.ndarray:
+                coverage: jnp.ndarray, return_sweeps: bool = False
+                ) -> jnp.ndarray:
     """``_resolve`` as a bounded ``lax.while_loop`` (one pop attempt per
     iteration), bit-compatible with the numpy oracle given the same
     ``order``.
 
     order: (M, N) int — per-edge client indices by descending preference.
-    Returns assoc (N, M) one-hot int32.
+    Returns assoc (N, M) one-hot int32; with ``return_sweeps`` also the
+    loop's pop-attempt count (the serial analogue of a sweep count — the
+    counter already lives in the while state, so asking for it is free).
     """
     m_edges, n_clients = order.shape
     # Each iteration either advances an edge's queue pointer (≤ N·M pops
@@ -186,13 +189,18 @@ def resolve_jax(order: jnp.ndarray, dist: jnp.ndarray, quota: int,
     zeros_m = jnp.zeros((m_edges,), jnp.int32)
     state = (taken0, zeros_m, zeros_m, jnp.asarray(0, jnp.int32),
              jnp.asarray(False), jnp.asarray(False), jnp.asarray(0, jnp.int32))
-    taken = jax.lax.while_loop(cond, body, state)[0]
-    return ((taken[:, None] == jnp.arange(m_edges)[None, :]) &
-            (taken[:, None] >= 0)).astype(jnp.int32)
+    final = jax.lax.while_loop(cond, body, state)
+    taken = final[0]
+    assoc = ((taken[:, None] == jnp.arange(m_edges)[None, :]) &
+             (taken[:, None] >= 0)).astype(jnp.int32)
+    if return_sweeps:
+        return assoc, final[6]
+    return assoc
 
 
 def resolve_parallel(order: jnp.ndarray, dist: jnp.ndarray, quota: int,
-                     coverage: jnp.ndarray) -> jnp.ndarray:
+                     coverage: jnp.ndarray, return_sweeps: bool = False
+                     ) -> jnp.ndarray:
     """Vectorized quota-round resolver — the default inside ``round_step``.
 
     One *sweep* plays a whole batch of deferred-acceptance proposals:
@@ -215,7 +223,8 @@ def resolve_parallel(order: jnp.ndarray, dist: jnp.ndarray, quota: int,
     observed handful of sweeps, each a top-k plus a few masked reductions.
 
     order: (M, N) int — per-edge client indices by descending preference.
-    Returns assoc (N, M) one-hot int32.
+    Returns assoc (N, M) one-hot int32; with ``return_sweeps`` also the
+    sweep count from the while state (free — no extra compute).
     """
     m_edges, n_clients = order.shape
     # rank[m, c] = position of client c in edge m's queue: the inverse
@@ -261,13 +270,18 @@ def resolve_parallel(order: jnp.ndarray, dist: jnp.ndarray, quota: int,
 
     state = (jnp.full((n_clients,), -1, jnp.int32), ~coverage,
              jnp.asarray(False), jnp.asarray(0, jnp.int32))
-    taken = jax.lax.while_loop(cond, body, state)[0]
-    return ((taken[:, None] == col[None, :]) &
-            (taken[:, None] >= 0)).astype(jnp.int32)
+    final = jax.lax.while_loop(cond, body, state)
+    taken = final[0]
+    assoc = ((taken[:, None] == col[None, :]) &
+             (taken[:, None] >= 0)).astype(jnp.int32)
+    if return_sweeps:
+        return assoc, final[3]
+    return assoc
 
 
 def resolve_candidates(pref: jnp.ndarray, cand, quota: int,
-                       n_edges: int) -> jnp.ndarray:
+                       n_edges: int, return_sweeps: bool = False
+                       ) -> jnp.ndarray:
     """``resolve_parallel`` re-expressed over the (N, K) candidate frontier
     (DESIGN.md §9): the same batched deferred-acceptance sweeps, with every
     per-sweep tensor O(N·K) instead of O(N·M) and the per-edge proposal
@@ -290,7 +304,8 @@ def resolve_candidates(pref: jnp.ndarray, cand, quota: int,
     pref: (N, K) per-pair preference (higher = better; invalid pairs may
     hold any value).  ``cand.idx`` rows MUST be (distance, edge)-sorted —
     ``build_candidates`` guarantees it.
-    Returns assigned (N,) int32 — edge index or −1.
+    Returns assigned (N,) int32 — edge index or −1; with ``return_sweeps``
+    also the sweep count from the while state.
     """
     idx, valid, dist = cand.idx, cand.valid, cand.dist
     n, k = idx.shape
@@ -348,12 +363,16 @@ def resolve_candidates(pref: jnp.ndarray, cand, quota: int,
 
     state = (jnp.full((n,), -1, jnp.int32), ~valid,
              jnp.asarray(False), jnp.asarray(0, jnp.int32))
-    return jax.lax.while_loop(cond, body, state)[0]
+    final = jax.lax.while_loop(cond, body, state)
+    if return_sweeps:
+        return final[0], final[3]
+    return final[0]
 
 
 def associate_candidates(policy: str, *, scores: jnp.ndarray | None,
                          gains: jnp.ndarray, cand, quota: int, key,
-                         n_edges: int) -> jnp.ndarray:
+                         n_edges: int,
+                         return_sweeps: bool = False) -> jnp.ndarray:
     """Candidate-frontier association (DESIGN.md §9): the (N, K) analogue
     of ``associate_jax``, returning the compact assigned vector (N,).
 
@@ -381,7 +400,8 @@ def associate_candidates(policy: str, *, scores: jnp.ndarray | None,
         pref = _cand.gather(cand, jax.random.uniform(key, gains.shape))
     else:
         raise ValueError(f"unknown association policy {policy!r}")
-    return resolve_candidates(pref, cand, quota, n_edges)
+    return resolve_candidates(pref, cand, quota, n_edges,
+                              return_sweeps=return_sweeps)
 
 
 RESOLVERS: Dict[str, Callable[..., jnp.ndarray]] = {
@@ -405,7 +425,8 @@ def associate_jax(policy: str, *, scores: jnp.ndarray | None,
                   gains: jnp.ndarray, dist: jnp.ndarray, quota: int,
                   coverage_radius_m: float, key,
                   avail: jnp.ndarray | None = None,
-                  resolver: str = "parallel") -> jnp.ndarray:
+                  resolver: str = "parallel",
+                  return_sweeps: bool = False) -> jnp.ndarray:
     """JAX-native association (N, M) one-hot; pure, jit/vmap-safe.
 
     ``avail`` (N,) is the scenario availability mask (DESIGN.md §6): an
@@ -428,7 +449,8 @@ def associate_jax(policy: str, *, scores: jnp.ndarray | None,
         coverage = coverage & (avail > 0)[:, None]
     pref = jnp.where(coverage, pref, -jnp.inf)
     order = jnp.argsort(-pref, axis=0).T                       # (M, N)
-    return RESOLVERS[resolver](order, dist, quota, coverage)
+    return RESOLVERS[resolver](order, dist, quota, coverage,
+                               return_sweeps=return_sweeps)
 
 
 def associate(policy: str, *, scores: np.ndarray, gains_to_edges: np.ndarray,

@@ -38,6 +38,8 @@ import numpy as np
 from repro.core import (aggregation, association, candidates, cost, env,
                         fuzzy, noma, pdd, staleness)
 from repro.core.candidates import CandidateSet
+from repro import telemetry
+from repro.telemetry.spans import stage as _stage
 from repro.data import federated
 from repro.models.mlp import MLPClassifier
 from repro import scenarios
@@ -81,6 +83,13 @@ class EngineSpec:
     # degree is bit-identical to dense by the §9 parity contract, smaller
     # K prunes the market (feasibility invariants still hold).
     candidates_k: Optional[int] = None
+    # in-scan telemetry (DESIGN.md §10): with it on, ``round_step`` returns
+    # ``(state', (RoundMetrics, telemetry.RoundTrace))`` — the per-stage
+    # Eq. 23a decomposition plus association/scheduler internals riding the
+    # scan outputs.  Off (the default) the trace is STRUCTURALLY absent:
+    # the lowered program and every output are bit-identical to the
+    # telemetry-less engine (golden parity holds un-re-recorded).
+    telemetry: bool = False
 
 
 class RoundBundle(NamedTuple):
@@ -239,14 +248,17 @@ def _local_sgd(model: MLPClassifier, lr: float, tau1: int, batch_size: int):
 
 def _associate(cfg, spec: EngineSpec, key, gains, dist, counts, stale,
                avail: Optional[jnp.ndarray] = None,
-               cand: Optional[CandidateSet] = None) -> jnp.ndarray:
+               cand: Optional[CandidateSet] = None,
+               with_sweeps: bool = False) -> jnp.ndarray:
     """Association, fully in JAX.  ``avail`` (N,) masks unavailable
     clients out of coverage (scenario dropout).
 
     Dense (``cand=None``): returns the (N, M) one-hot.  Candidate mode
     (DESIGN.md §9): fuzzy scoring and the resolver sweeps run on the
     (N, K) frontier (``avail`` is already folded into ``cand.valid`` by
-    the builder) and the COMPACT assigned vector (N,) comes back."""
+    the builder) and the COMPACT assigned vector (N,) comes back.
+    ``with_sweeps`` (telemetry) makes the result a (result, sweep-count)
+    pair — the counter already sits in the resolver's while state."""
     scores = None
     if spec.policy == "fcea":
         if cand is not None:
@@ -269,12 +281,13 @@ def _associate(cfg, spec: EngineSpec, key, gains, dist, counts, stale,
     if cand is not None:
         return association.associate_candidates(
             spec.policy, scores=scores, gains=gains, cand=cand,
-            quota=quota_for(cfg, spec), key=key, n_edges=cfg.n_edges)
+            quota=quota_for(cfg, spec), key=key, n_edges=cfg.n_edges,
+            return_sweeps=with_sweeps)
     return association.associate_jax(
         spec.policy, scores=scores, gains=gains, dist=dist,
         quota=quota_for(cfg, spec),
         coverage_radius_m=coverage_radius(cfg), key=key, avail=avail,
-        resolver=spec.resolver)
+        resolver=spec.resolver, return_sweeps=with_sweeps)
 
 
 def _build_candidates(cfg, spec: EngineSpec, dist,
@@ -368,9 +381,14 @@ def associate_snapshot(cfg, spec: EngineSpec, state: RoundState,
     return out
 
 
-def _schedule(cfg, spec: EngineSpec, rc_all: cost.RoundCost
-              ) -> jnp.ndarray:
-    """Semi-synchronous edge-selection mask z (M,) from ONE cost eval.
+def _schedule_traced(cfg, spec: EngineSpec, rc_all: cost.RoundCost
+                     ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, ...]]:
+    """Semi-synchronous edge-selection mask z (M,) from ONE cost eval,
+    plus the scheduler internals ``(iterations, residual, z_relaxed)``
+    the telemetry trace records (zeros / the final z for the "fastest"
+    baseline).  The internals ride along for free — ``pdd_schedule``
+    already returns the full ``PDDResult``, so a telemetry-off caller
+    that keeps only z leaves them to dead-code elimination.
 
     The PDD problem must optimise EXACTLY the Eq. 23a surface the engine
     bills: its per-edge time is ``t_cloud + U_m`` with
@@ -387,8 +405,15 @@ def _schedule(cfg, spec: EngineSpec, rc_all: cost.RoundCost
         res = pdd.pdd_schedule(rc_all.per_edge_energy_j, t_cloud, U,
                                lam_t=cfg.lambda_t, lam_e=cfg.lambda_e,
                                quota=quota)
-        return res.z_binary
-    return pdd.semi_sync_fastest(rc_all.per_edge_time_s, quota)
+        return res.z_binary, (res.iterations, res.residual, res.z)
+    z = pdd.semi_sync_fastest(rc_all.per_edge_time_s, quota)
+    return z, (jnp.asarray(0, jnp.int32), jnp.asarray(0.0, jnp.float32),
+               z.astype(jnp.float32))
+
+
+def _schedule(cfg, spec: EngineSpec, rc_all: cost.RoundCost) -> jnp.ndarray:
+    """The z-only view of ``_schedule_traced``."""
+    return _schedule_traced(cfg, spec, rc_all)[0]
 
 
 def _train(cfg, spec: EngineSpec, model: MLPClassifier, key,
@@ -484,7 +509,11 @@ def round_keys(spec: EngineSpec, key) -> Tuple[jnp.ndarray, ...]:
 def round_step(cfg, spec: EngineSpec, state: RoundState,
                bundle: RoundBundle, actor_params: Optional[Params] = None
                ) -> Tuple[RoundState, RoundMetrics]:
-    """One pure global round; jit/scan/vmap to taste."""
+    """One pure global round; jit/scan/vmap to taste.
+
+    Returns ``(state', RoundMetrics)`` — or, with ``spec.telemetry``,
+    ``(state', (RoundMetrics, telemetry.RoundTrace))``; ``split_output``
+    normalises the two shapes for generic callers."""
     model = MLPClassifier(cfg.input_dim, cfg.hidden, cfg.n_classes)
 
     # 0. scenario transition (DESIGN.md §6).  The static kind keeps the
@@ -511,43 +540,60 @@ def round_step(cfg, spec: EngineSpec, state: RoundState,
     #    and scoring/resolution/billing all run on it (DESIGN.md §9);
     #    the (N, M) one-hot is reconstructed only for the training/
     #    aggregation stage's cheap masked reductions.
-    cand = _build_candidates(cfg, spec, dist, avail)
-    if cand is not None:
-        assigned = _associate(cfg, spec, k_assoc, gains, dist,
-                              bundle.counts, state.staleness, avail, cand)
-        assoc = candidates.assigned_one_hot(
-            assigned, cfg.n_edges).astype(jnp.float32)
-        # ``cand.valid`` already excludes dropped clients — no avail mask
-    else:
-        assigned = None
-        assoc = _associate(cfg, spec, k_assoc, gains, dist, bundle.counts,
-                           state.staleness, avail).astype(jnp.float32)
-        if dynamic:
-            # explicit Eq. 11/17/23a mask: even a policy that ignored
-            # ``avail`` cannot train on, aggregate or bill a dropped client
-            assoc = assoc * avail[:, None]
+    sweeps = None
+    with _stage("associate"):
+        cand = _build_candidates(cfg, spec, dist, avail)
+        if cand is not None:
+            out = _associate(cfg, spec, k_assoc, gains, dist,
+                             bundle.counts, state.staleness, avail, cand,
+                             with_sweeps=spec.telemetry)
+            assigned = out
+            if spec.telemetry:
+                assigned, sweeps = out
+            assoc = candidates.assigned_one_hot(
+                assigned, cfg.n_edges).astype(jnp.float32)
+            # ``cand.valid`` already excludes dropped clients — no avail mask
+        else:
+            assigned = None
+            assoc = _associate(cfg, spec, k_assoc, gains, dist,
+                               bundle.counts, state.staleness, avail,
+                               with_sweeps=spec.telemetry)
+            if spec.telemetry:
+                assoc, sweeps = assoc
+            assoc = assoc.astype(jnp.float32)
+            if dynamic:
+                # explicit Eq. 11/17/23a mask: even a policy that ignored
+                # ``avail`` cannot train on, aggregate or bill a dropped
+                # client
+                assoc = assoc * avail[:, None]
     # 3. resource allocation, clamped to the device class caps
-    p, f = _allocate(cfg, spec, k_alloc, assoc, gains, bundle.counts,
-                     actor_params, scen if dynamic else None, dist,
-                     assigned)
-    if dynamic:
-        p = jnp.minimum(p, scen.p_max_w)
-        f = jnp.minimum(f, scen.f_max_hz)
+    with _stage("allocate"):
+        p, f = _allocate(cfg, spec, k_alloc, assoc, gains, bundle.counts,
+                         actor_params, scen if dynamic else None, dist,
+                         assigned)
+        if dynamic:
+            p = jnp.minimum(p, scen.p_max_w)
+            f = jnp.minimum(f, scen.f_max_hz)
     # 4. ONE cost evaluation at z=1, reused by the scheduler and the final
     #    masked round cost (Eqs. 18-19 depend on z only through a mask)
-    rc_all = cost.round_cost(cfg, power_w=p, f_hz=f, gains=gains,
-                             assoc=assoc, z=jnp.ones((cfg.n_edges,)),
-                             n_samples=bundle.counts,
-                             noma_enabled=spec.noma_enabled,
-                             capacitance=scen.kappa if dynamic else None,
-                             sic_impl=spec.sic_impl,
-                             sic_max_per_edge=quota_for(cfg, spec),
-                             assigned=assigned)
-    z = _schedule(cfg, spec, rc_all)
-    rc = cost.apply_schedule(cfg, rc_all, z)
+    with _stage("schedule"):
+        rc_all = cost.round_cost(cfg, power_w=p, f_hz=f, gains=gains,
+                                 assoc=assoc, z=jnp.ones((cfg.n_edges,)),
+                                 n_samples=bundle.counts,
+                                 noma_enabled=spec.noma_enabled,
+                                 capacitance=scen.kappa if dynamic else None,
+                                 sic_impl=spec.sic_impl,
+                                 sic_max_per_edge=quota_for(cfg, spec),
+                                 assigned=assigned)
+        if spec.telemetry:
+            z, sched = _schedule_traced(cfg, spec, rc_all)
+        else:
+            z = _schedule(cfg, spec, rc_all)
+        rc = cost.apply_schedule(cfg, rc_all, z)
     # 5. τ₂·τ₁ training + hierarchical aggregation
-    global_params, client_params = _train(cfg, spec, model, k_train, state,
-                                          bundle, assoc, z)
+    with _stage("train"):
+        global_params, client_params = _train(cfg, spec, model, k_train,
+                                              state, bundle, assoc, z)
     # 6. staleness (Eq. 20): reset only for clients whose edge was selected
     selected = jnp.sum(assoc, axis=1) > 0
     effective = selected & (z > 0)[jnp.argmax(assoc, axis=1)]
@@ -556,10 +602,14 @@ def round_step(cfg, spec: EngineSpec, state: RoundState,
     round_idx = state.round_idx + 1
     n_avail = (jnp.sum(avail > 0, dtype=jnp.int32) if dynamic
                else jnp.asarray(cfg.n_clients, jnp.int32))
+    with _stage("eval"):
+        accuracy = model.accuracy(global_params, bundle.test_x,
+                                  bundle.test_y)
+        loss = model.loss(global_params, (bundle.test_x, bundle.test_y))
     metrics = RoundMetrics(
         round=round_idx,
-        accuracy=model.accuracy(global_params, bundle.test_x, bundle.test_y),
-        loss=model.loss(global_params, (bundle.test_x, bundle.test_y)),
+        accuracy=accuracy,
+        loss=loss,
         avg_staleness=jnp.mean(new_stale.astype(jnp.float32)),
         total_time_s=rc.total_time_s,
         total_energy_j=rc.total_energy_j,
@@ -569,6 +619,16 @@ def round_step(cfg, spec: EngineSpec, state: RoundState,
         z=z)
     new_state = RoundState(global_params, client_params, gains, new_stale,
                            key, round_idx, scen)
+    if spec.telemetry:
+        tr = telemetry.round_trace(
+            cfg, spec, round_idx=round_idx, rc_all=rc_all, z=z,
+            assoc=assoc, power_w=p, f_hz=f, counts=bundle.counts,
+            staleness=new_stale,
+            capacitance=scen.kappa if dynamic else None,
+            sweeps=sweeps, sched=sched, cand=cand, assigned=assigned,
+            dist=dist, avail=avail,
+            coverage_radius_m=coverage_radius(cfg))
+        return new_state, (metrics, tr)
     return new_state, metrics
 
 
@@ -588,7 +648,9 @@ def run_scanned(cfg, spec: EngineSpec, state: RoundState,
                 actor_params: Optional[Params] = None
                 ) -> Tuple[RoundState, RoundMetrics]:
     """A whole experiment as ONE XLA program: ``lax.scan`` over rounds.
-    Returned metrics leaves have a leading (n_rounds,) axis."""
+    Returned metrics leaves have a leading (n_rounds,) axis (with
+    ``spec.telemetry`` the per-round output is the (metrics, trace) pair
+    — see ``split_output``)."""
     return _scan_rounds(cfg, spec, state, bundle, n_rounds, actor_params)
 
 
@@ -799,6 +861,19 @@ def run_scanned_client_sharded(cfg, spec: EngineSpec, state: RoundState,
                                      int(mesh.devices.size))
     state, bundle = shard_clients(state, bundle, mesh)
     return run_scanned(cfg, spec, state, bundle, n_rounds, actor_params)
+
+
+def split_output(spec: EngineSpec, out):
+    """Normalise a driver's per-round output to ``(metrics, trace)``.
+
+    Telemetry off: ``out`` IS the ``RoundMetrics`` pytree → ``(out, None)``.
+    Telemetry on: ``out`` is the ``(RoundMetrics, RoundTrace)`` pair the
+    engine emitted → returned as-is.  The split is static (it follows the
+    spec flag), so generic callers — the sweep runner, benches, tests —
+    handle both engine shapes with one line."""
+    if spec.telemetry:
+        return out
+    return out, None
 
 
 def metrics_row(metrics: RoundMetrics, i: Optional[int] = None):

@@ -83,6 +83,9 @@ class SweepGrid:
     # dense-path SIC formulation (EngineSpec.sic_impl); the candidate
     # path's compact SIC is the sorted/top-k formulation regardless
     sic_impl: str = "auto"
+    # in-scan telemetry (DESIGN.md §10): every cell also persists its
+    # per-round RoundTrace as ``<cell_id>.trace.json`` beside the metrics
+    telemetry: bool = False
     # per-group DDPG training budget (used when the grid has
     # allocator="ddpg" cells and no pre-trained actor is supplied)
     ddpg_episodes: int = 12
@@ -117,22 +120,25 @@ def expand_grid(grid: SweepGrid) -> List[SweepCell]:
 
 
 def _spec_for(cell: SweepCell, candidates_k: "int | None" = None,
-              sic_impl: str = "auto") -> engine.EngineSpec:
+              sic_impl: str = "auto",
+              telemetry: bool = False) -> engine.EngineSpec:
     return engine.EngineSpec(policy=cell.policy, allocator=cell.allocator,
                              scheduler=cell.scheduler,
                              noma_enabled=cell.noma_enabled,
                              scenario=cell.sspec.engine_kind(),
-                             candidates_k=candidates_k, sic_impl=sic_impl)
+                             candidates_k=candidates_k, sic_impl=sic_impl,
+                             telemetry=telemetry)
 
 
 def _group_cells(cells: Sequence[SweepCell],
                  candidates_k: "int | None" = None,
-                 sic_impl: str = "auto"
+                 sic_impl: str = "auto", telemetry: bool = False
                  ) -> Dict[engine.EngineSpec, List[SweepCell]]:
     groups: Dict[engine.EngineSpec, List[SweepCell]] = {}
     for cell in cells:
-        groups.setdefault(_spec_for(cell, candidates_k, sic_impl),
-                          []).append(cell)
+        groups.setdefault(
+            _spec_for(cell, candidates_k, sic_impl, telemetry),
+            []).append(cell)
     return groups
 
 
@@ -167,7 +173,8 @@ def run_sweep(cfg, grid: SweepGrid, *, out_dir: str = "results",
                 "ddpg cells mix static (2N,) and dynamic (3N,) observation "
                 "shapes — one actor cannot serve both; split the grid or "
                 "drop actor_params to train per group")
-    groups = _group_cells(cells, grid.candidates_k, grid.sic_impl)
+    groups = _group_cells(cells, grid.candidates_k, grid.sic_impl,
+                          grid.telemetry)
     sweep_dir = os.path.join(out_dir, f"sweep_{grid.name}")
     if write_json:
         os.makedirs(sweep_dir, exist_ok=True)
@@ -213,16 +220,17 @@ def run_sweep(cfg, grid: SweepGrid, *, out_dir: str = "results",
             train_s = time.perf_counter() - t0
         t0 = time.perf_counter()
         if mesh is not None:
-            _, ms = engine.run_fleet_sharded(
+            _, out = engine.run_fleet_sharded(
                 cfg, spec, states, bundles, grid.n_rounds,
                 cell_actors if cell_actors is not None else actor_params,
                 mesh=mesh, per_sim_actors=cell_actors is not None)
         elif cell_actors is not None:
-            _, ms = engine.run_fleet_actors(cfg, spec, states, bundles,
-                                            grid.n_rounds, cell_actors)
+            _, out = engine.run_fleet_actors(cfg, spec, states, bundles,
+                                             grid.n_rounds, cell_actors)
         else:
-            _, ms = engine.run_fleet(cfg, spec, states, bundles,
-                                     grid.n_rounds, actor_params)
+            _, out = engine.run_fleet(cfg, spec, states, bundles,
+                                      grid.n_rounds, actor_params)
+        ms, traces = engine.split_output(spec, out)
         jax.block_until_ready(ms.cost)
         dt = time.perf_counter() - t0
         timing = {"spec": dataclasses.asdict(spec),
@@ -235,6 +243,8 @@ def run_sweep(cfg, grid: SweepGrid, *, out_dir: str = "results",
         timings.append(timing)
         # one device->host transfer per metrics leaf for the WHOLE group
         host = {k: np.asarray(v) for k, v in ms._asdict().items()}
+        tr_host = (None if traces is None else
+                   {k: np.asarray(v) for k, v in traces._asdict().items()})
         for i, cell in enumerate(members):
             rows = {k: v[i].tolist() for k, v in host.items()}
             per_cell[cell.cell_id] = rows
@@ -246,6 +256,17 @@ def run_sweep(cfg, grid: SweepGrid, *, out_dir: str = "results",
                 with open(os.path.join(sweep_dir,
                                        f"{cell.cell_id}.json"), "w") as fh:
                     json.dump(payload, fh, indent=1)
+                if tr_host is not None:
+                    # the per-stage Eq. 23a decomposition + association/
+                    # scheduler internals, beside the metrics JSON
+                    tp = {"cell": dataclasses.asdict(cell),
+                          "n_rounds": grid.n_rounds,
+                          "trace": {k: v[i].tolist()
+                                    for k, v in tr_host.items()}}
+                    with open(os.path.join(
+                            sweep_dir,
+                            f"{cell.cell_id}.trace.json"), "w") as fh:
+                        json.dump(tp, fh, indent=1)
 
     summary = {
         "name": grid.name,
@@ -295,6 +316,9 @@ def main(argv=None) -> None:
                     help="shard each group's fleet axis over all devices")
     ap.add_argument("--candidates", type=int, default=None, metavar="K",
                     help="run every cell on the (N, K) candidate frontier")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="persist per-round RoundTrace JSON beside each "
+                         "cell's metrics")
     args = ap.parse_args(argv)
 
     cfg = dc.replace(CONFIG, n_clients=32, n_edges=4, min_samples=60,
@@ -306,7 +330,8 @@ def main(argv=None) -> None:
         policies=("fcea", "gcea"),
         seeds=(0,) if args.quick else (0, 1),
         n_rounds=3 if args.quick else 10,
-        candidates_k=args.candidates)
+        candidates_k=args.candidates,
+        telemetry=args.telemetry)
     summary = run_sweep(cfg, grid, out_dir=args.out,
                         mesh=engine.fleet_mesh() if args.sharded else None)
     print(json.dumps({k: summary[k] for k in

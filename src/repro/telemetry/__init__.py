@@ -1,0 +1,23 @@
+"""In-scan round telemetry (DESIGN.md §10).
+
+Three pieces, all gated by the static ``EngineSpec.telemetry`` flag so the
+disabled path is structurally absent from the engine's programs:
+
+* ``trace``  — the ``RoundTrace`` pytree of per-stage observables riding
+  the scan outputs next to ``RoundMetrics`` (Eq. 23a cost decomposition,
+  association/scheduler internals, SIC decode depth, staleness histogram);
+* ``sink``   — host-side sinks (JSONL, in-memory) fed from inside the
+  jitted drivers via ``jax.debug.callback``, plus the pure collect mode;
+* ``spans``  — named profiler spans around the paper stages and the
+  ``jax.profiler.trace`` capture helper behind ``benchmarks/run.py
+  --profile``.
+
+``sink`` imports the engine, so it is NOT re-exported here (the engine
+imports ``trace``/``spans``); import it explicitly::
+
+    from repro.telemetry import sink
+"""
+from repro.telemetry import spans, trace
+from repro.telemetry.trace import RoundTrace, STALE_BIN_EDGES, round_trace
+
+__all__ = ["RoundTrace", "STALE_BIN_EDGES", "round_trace", "spans", "trace"]

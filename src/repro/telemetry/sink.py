@@ -1,0 +1,228 @@
+"""Host-side trace sinks and streaming drivers (DESIGN.md §10.2).
+
+Two consumption modes for a telemetry-enabled engine
+(``EngineSpec(telemetry=True)``):
+
+* **collect** — pure: the drivers already stack ``RoundTrace`` along the
+  rounds axis as a scan output; ``collect_scanned`` / ``collect_fleet``
+  just split it from the metrics.  Works unchanged under vmap and both
+  sharding drivers (the trace is an output pytree like any other).
+* **stream** — ``stream_scanned`` / ``stream_fleet`` re-wrap the same
+  ``round_step`` in a scan whose body feeds each round's trace to a host
+  sink through ``jax.debug.callback``, so traces leave the device while
+  the program runs, without breaking jit.  The single-simulation driver
+  uses an ORDERED callback (JSONL lines arrive in round order); under
+  vmap ordering across lanes is undefined, so every record carries its
+  ``round`` index and ``load_jsonl`` re-sorts.
+
+Sinks are tiny duck-typed objects with ``emit(trace)``: ``MemorySink``
+accumulates host pytrees (the round-trip test target), ``JsonlSink``
+appends one JSON object per round to a file.
+"""
+from __future__ import annotations
+
+import functools
+import json
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import engine
+from repro.telemetry.trace import RoundTrace
+
+
+# ---------------------------------------------------------------------------
+# Sinks
+# ---------------------------------------------------------------------------
+
+class MemorySink:
+    """Accumulates per-round traces as host numpy pytrees."""
+
+    def __init__(self) -> None:
+        self.records: List[RoundTrace] = []
+
+    def emit(self, trace: RoundTrace) -> None:
+        self.records.append(jax.tree.map(np.asarray, trace))
+
+    def stacked(self) -> RoundTrace:
+        """Records stacked along a leading rounds axis, sorted by round."""
+        order = np.argsort([int(r.round) for r in self.records],
+                           kind="stable")
+        recs = [self.records[i] for i in order]
+        return jax.tree.map(lambda *ls: np.stack(ls), *recs)
+
+
+class JsonlSink:
+    """Appends one JSON object per round: ``{"round": 3, "time_local_s":
+    ..., "edge_load": [...], ...}``.  Usable as a context manager."""
+
+    def __init__(self, path: str) -> None:
+        self.path = path
+        self._fh = open(path, "a")
+
+    def emit(self, trace: RoundTrace) -> None:
+        self._fh.write(json.dumps(trace_record(trace)) + "\n")
+        self._fh.flush()
+
+    def close(self) -> None:
+        self._fh.close()
+
+    def __enter__(self) -> "JsonlSink":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def trace_record(trace: RoundTrace) -> Dict[str, Any]:
+    """One round's trace as a JSON-serialisable flat dict."""
+    out: Dict[str, Any] = {}
+    for name, leaf in trace._asdict().items():
+        arr = np.asarray(leaf)
+        out[name] = arr.item() if arr.ndim == 0 else arr.tolist()
+    return out
+
+
+def load_jsonl(path: str) -> Dict[str, np.ndarray]:
+    """Parse a ``JsonlSink`` file back to round-sorted stacked arrays,
+    dtype-matched to the ``RoundTrace`` leaves (the round-trip inverse of
+    the streaming drivers — pinned in tests/test_telemetry.py)."""
+    rows = [json.loads(l) for l in open(path) if l.strip()]
+    rows.sort(key=lambda r: r["round"])
+    int_fields = {"round", "assoc_sweeps", "edge_load", "pdd_iters",
+                  "sic_depth", "stale_hist"}
+    out = {}
+    for name in RoundTrace._fields:
+        dtype = np.int32 if name in int_fields else np.float32
+        out[name] = np.asarray([r[name] for r in rows], dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Pure collect mode
+# ---------------------------------------------------------------------------
+
+def collect_scanned(cfg, spec, state, bundle, n_rounds: int,
+                    actor_params=None):
+    """``run_scanned`` with the (metrics, trace) output split:
+    returns (final_state, metrics, trace) — trace ``None`` when the spec
+    has telemetry off."""
+    final, out = engine.run_scanned(cfg, spec, state, bundle, n_rounds,
+                                    actor_params)
+    ms, trace = engine.split_output(spec, out)
+    return final, ms, trace
+
+
+def collect_fleet(cfg, spec, states, bundles, n_rounds: int,
+                  actor_params=None):
+    """``run_fleet`` with the (metrics, trace) output split; trace leaves
+    gain the (n_seeds, n_rounds, ...) fleet shape."""
+    final, out = engine.run_fleet(cfg, spec, states, bundles, n_rounds,
+                                  actor_params)
+    ms, trace = engine.split_output(spec, out)
+    return final, ms, trace
+
+
+def emit_stacked(trace, sink, fleet_axes: int = 0) -> None:
+    """Feed an already-collected stacked trace to a sink, one round at a
+    time (host side) — the bridge that gives the SHARDED drivers JSONL
+    output without putting callbacks inside their GSPMD programs.
+    ``fleet_axes`` strips leading batch axes (1 for a fleet trace)."""
+    host = jax.tree.map(np.asarray, trace)
+    leaves, treedef = jax.tree.flatten(host)
+    if fleet_axes:
+        sims = leaves[0].shape[:fleet_axes]
+        for flat_idx in np.ndindex(*sims):
+            for r in range(leaves[0].shape[fleet_axes]):
+                sink.emit(jax.tree.unflatten(
+                    treedef, [l[flat_idx][r] for l in leaves]))
+        return
+    for r in range(leaves[0].shape[0]):
+        sink.emit(jax.tree.unflatten(treedef, [l[r] for l in leaves]))
+
+
+# ---------------------------------------------------------------------------
+# Streaming drivers (jax.debug.callback inside the scan body)
+# ---------------------------------------------------------------------------
+
+def _require_telemetry(spec) -> None:
+    if not spec.telemetry:
+        raise ValueError("streaming drivers need EngineSpec(telemetry=True)"
+                         " — with it off the trace is structurally absent")
+
+
+def _scan_streaming(cfg, spec, n_rounds: int, sink, ordered: bool):
+    """A jitted scanned driver whose body emits each round's trace."""
+
+    def step(carry, _):
+        state, bundle, actor_params = carry
+        state2, (m, tr) = engine.round_step(cfg, spec, state, bundle,
+                                            actor_params)
+        jax.debug.callback(sink.emit, tr, ordered=ordered)
+        return (state2, bundle, actor_params), (m, tr)
+
+    @jax.jit
+    def run(state, bundle, actor_params):
+        (final, _, _), out = jax.lax.scan(
+            step, (state, bundle, actor_params), None, length=n_rounds)
+        return final, out
+
+    return run
+
+
+def stream_scanned(cfg, spec, state, bundle, n_rounds: int, sink,
+                   actor_params=None, *, ordered: bool = True):
+    """``run_scanned`` + per-round streaming to ``sink``.  Returns
+    (final_state, metrics, trace) exactly like ``collect_scanned`` —
+    the stream is a tee, not a different result."""
+    _require_telemetry(spec)
+    run = _scan_streaming(cfg, spec, n_rounds, sink, ordered)
+    final, (ms, trace) = run(state, bundle, actor_params)
+    jax.block_until_ready(ms)
+    return final, ms, trace
+
+
+def stream_scanned_client_sharded(cfg, spec, state, bundle, n_rounds: int,
+                                  sink, actor_params=None, *, mesh=None):
+    """The client-sharded scanned driver (DESIGN.md §9.3) with per-round
+    streaming: pad → shard → stream.  Returns padded-world results like
+    ``engine.run_scanned_client_sharded``."""
+    _require_telemetry(spec)
+    mesh = engine.client_mesh() if mesh is None else mesh
+    cfg, state, bundle = engine.pad_clients(cfg, state, bundle,
+                                            int(mesh.devices.size))
+    state, bundle = engine.shard_clients(state, bundle, mesh)
+    return stream_scanned(cfg, spec, state, bundle, n_rounds, sink,
+                          actor_params)
+
+
+def stream_fleet(cfg, spec, states, bundles, n_rounds: int, sink,
+                 actor_params=None, *, mesh=None):
+    """``run_fleet`` + streaming: the callback fires once per (lane,
+    round) with the unbatched trace (vmap's callback batching rule), so
+    records interleave across lanes — ``load_jsonl`` re-sorts by round.
+    Pass ``mesh`` to shard the fleet axis first (placement only)."""
+    _require_telemetry(spec)
+
+    def step(carry, _):
+        state, bundle = carry
+        state2, (m, tr) = engine.round_step(cfg, spec, state, bundle,
+                                            actor_params)
+        jax.debug.callback(sink.emit, tr, ordered=False)
+        return (state2, bundle), (m, tr)
+
+    @jax.jit
+    def run(states, bundles):
+        def one(state, bundle):
+            (final, _), out = jax.lax.scan(step, (state, bundle), None,
+                                           length=n_rounds)
+            return final, out
+
+        return jax.vmap(one)(states, bundles)
+
+    if mesh is not None:
+        states, bundles = engine.shard_fleet((states, bundles), mesh)
+    final, (ms, trace) = run(states, bundles)
+    jax.block_until_ready(ms)
+    return final, ms, trace

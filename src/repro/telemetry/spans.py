@@ -1,0 +1,55 @@
+"""Named profiler spans for the paper stages (DESIGN.md §10.3).
+
+``stage(name)`` wraps a round stage in BOTH a
+``jax.profiler.TraceAnnotation`` (host-side span — visible while the
+stage's python runs, i.e. during tracing and in any eager/stepped
+driver) and a ``jax.named_scope`` (propagates into HLO op metadata, so a
+device profile captured with ``jax.profiler.trace`` segments the one
+fused scan program by paper stage instead of showing a single opaque
+``while`` op).  Both are metadata-only: the lowered computation — and
+hence every golden trajectory — is unchanged, and there is zero runtime
+cost outside a capture.
+
+``profile_scanned`` is the capture helper behind ``benchmarks/run.py
+--profile``: warm/compile first so the capture holds steady-state device
+work, then run the scanned driver under ``jax.profiler.trace``.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+
+STAGES = ("associate", "allocate", "schedule", "train", "eval")
+
+
+@contextlib.contextmanager
+def stage(name: str):
+    """Span a paper stage: profiler TraceAnnotation + HLO named_scope."""
+    with jax.profiler.TraceAnnotation(f"hfl/{name}"), jax.named_scope(name):
+        yield
+
+
+def trace_capture(out_dir: str):
+    """The ``jax.profiler.trace`` context, path-normalised: open a capture
+    whose trace events include the ``hfl/<stage>`` annotations."""
+    return jax.profiler.trace(out_dir)
+
+
+def profile_scanned(cfg, spec, state, bundle, n_rounds: int, out_dir: str,
+                    actor_params: Optional[object] = None) -> str:
+    """Capture a stage-annotated device profile of ``run_scanned``.
+
+    Compiles + warms OUTSIDE the capture, then records one steady-state
+    driver call (plus a host-side ``hfl/run_scanned`` annotation bracketing
+    it).  Returns ``out_dir`` (TensorBoard / XProf readable).
+    """
+    from repro.core import engine            # local import: no cycle
+    run = lambda: engine.run_scanned(cfg, spec, state, bundle, n_rounds,
+                                     actor_params)
+    jax.block_until_ready(run())             # compile + warm
+    with trace_capture(out_dir):
+        with jax.profiler.TraceAnnotation("hfl/run_scanned"):
+            jax.block_until_ready(run())
+    return out_dir

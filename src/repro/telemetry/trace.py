@@ -1,0 +1,159 @@
+"""The per-round trace pytree (DESIGN.md §10.1).
+
+``RoundTrace`` carries the quantities the paper optimises but
+``RoundMetrics`` collapses to two scalars — the Eq. 23a time/energy bill
+split by term, the deferred-acceptance and PDD convergence counters, the
+candidate-frontier health, the NOMA SIC decode depth and a staleness
+histogram — as plain jnp leaves, so a ``lax.scan`` stacks it along the
+rounds axis and ``vmap``/sharding treat it like any other output pytree.
+
+Everything here is a cheap elementwise epilogue over tensors the round
+already computed (``rc_all.client_time_s``, the association one-hot, the
+scheduler result): building the trace re-runs no stage.  The decomposition
+identity is exact by construction and pinned in tests/test_telemetry.py::
+
+    energy_local_j + energy_uplink_j + energy_cloud_j == total_energy_j
+    max over selected edges ≤ time_local_s + time_uplink_s + time_cloud_s
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import cost
+from repro.core.candidates import CandidateSet
+
+# Staleness histogram bucket LOWER edges: bucket b counts clients with
+# A_n in [edge_b, edge_{b+1})   (A_n ≥ 1 by Eq. 20; the last bucket is
+# open-ended).  Static, so the (8,) histogram leaf has a fixed shape.
+STALE_BIN_EDGES = (1, 2, 3, 4, 5, 6, 8, 12)
+
+
+class RoundTrace(NamedTuple):
+    """Per-round, per-stage observables (jnp leaves; scan-stackable).
+
+    Cost decomposition (the Eq. 23a bill split by term, all restricted to
+    the billed set — clients on z-selected edges):
+
+    * ``time_local_s``    — τ₂ · max billed t_cmp (Eqs. 4-5 compute term)
+    * ``time_uplink_s``   — τ₂ · max billed t_com (Eqs. 7-10 NOMA uplink)
+    * ``time_cloud_s``    — the Eq. 15 edge→cloud OFDMA hop
+    * ``energy_*_j``      — the matching Σ-shaped energy terms; they sum
+      exactly to ``RoundMetrics.total_energy_j``
+
+    Association internals:
+
+    * ``assoc_sweeps``    — deferred-acceptance sweep count (parallel /
+      candidate resolver) or queue-pop count (serial resolver)
+    * ``edge_load``       — (M,) admitted clients per edge
+    * ``frontier_valid_frac`` — valid (in-coverage ∧ available) share of
+      the (N, K) frontier slots; the dense path reports the same ratio
+      over the (N, M) coverage mask
+    * ``frontier_saturation`` — share of matched clients admitted via
+      their LAST frontier slot (≫ 0 ⇒ ``candidates_k`` is pruning)
+
+    Scheduler / NOMA / staleness:
+
+    * ``pdd_iters`` / ``pdd_residual`` — Alg. 1 iteration count and final
+      penalty feasibility residual (zeros for the "fastest" baseline)
+    * ``z_relaxed``       — the PDD's continuous z before rounding
+    * ``sic_depth``       — max per-edge occupancy = the longest SIC
+      decode chain an edge runs this round (Eq. 7)
+    * ``stale_hist``      — (len(STALE_BIN_EDGES),) histogram of post-
+      update A_n (Eq. 20)
+    """
+    round: jnp.ndarray               # () int32
+    time_local_s: jnp.ndarray        # () f32
+    time_uplink_s: jnp.ndarray       # () f32
+    time_cloud_s: jnp.ndarray        # () f32
+    energy_local_j: jnp.ndarray      # () f32
+    energy_uplink_j: jnp.ndarray     # () f32
+    energy_cloud_j: jnp.ndarray      # () f32
+    assoc_sweeps: jnp.ndarray        # () int32
+    edge_load: jnp.ndarray           # (M,) int32
+    frontier_valid_frac: jnp.ndarray # () f32
+    frontier_saturation: jnp.ndarray # () f32
+    pdd_iters: jnp.ndarray           # () int32
+    pdd_residual: jnp.ndarray        # () f32
+    z_relaxed: jnp.ndarray           # (M,) f32
+    sic_depth: jnp.ndarray           # () int32
+    stale_hist: jnp.ndarray          # (8,) int32
+
+
+def staleness_histogram(staleness: jnp.ndarray) -> jnp.ndarray:
+    """(N,) int staleness -> (len(STALE_BIN_EDGES),) int32 bucket counts."""
+    edges = jnp.asarray(STALE_BIN_EDGES, jnp.int32)
+    bucket = jnp.sum(staleness[:, None] >= edges[None, :], axis=1) - 1
+    bucket = jnp.clip(bucket, 0, len(STALE_BIN_EDGES) - 1)
+    return jnp.zeros((len(STALE_BIN_EDGES),), jnp.int32).at[bucket].add(1)
+
+
+def round_trace(cfg, spec, *, round_idx: jnp.ndarray, rc_all: cost.RoundCost,
+                z: jnp.ndarray, assoc: jnp.ndarray, power_w: jnp.ndarray,
+                f_hz: jnp.ndarray, counts: jnp.ndarray,
+                staleness: jnp.ndarray,
+                capacitance: Optional[jnp.ndarray],
+                sweeps: jnp.ndarray,
+                sched: Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray],
+                cand: Optional[CandidateSet],
+                assigned: Optional[jnp.ndarray],
+                dist: jnp.ndarray, avail: Optional[jnp.ndarray],
+                coverage_radius_m: float) -> RoundTrace:
+    """Build one round's trace from tensors the round already computed.
+
+    ``rc_all`` is the z = 1 cost surface (its per-client terms don't
+    depend on z); ``sched`` is ``engine._schedule_traced``'s
+    (iterations, residual, z_relaxed) triple; ``staleness`` is the
+    POST-update A_n so the histogram matches ``avg_staleness``.
+    """
+    f32 = jnp.float32
+    associated = jnp.sum(assoc, axis=1) > 0
+    billed = jnp.sum(assoc * z[None, :], axis=1) > 0            # (N,)
+
+    # -- Eq. 23a decomposition: recover the per-client stage terms from
+    #    the cached client_time (= t_cmp + t_com on associated clients)
+    t_cmp, e_cmp = cost.local_compute(cfg, f_hz, counts, capacitance)
+    t_com = jnp.where(associated, rc_all.client_time_s - t_cmp, 0.0)
+    e_com = power_w * t_com
+    tau2 = cfg.tau2
+    any_edge = jnp.sum(z) > 0
+    t_cloud = cfg.edge_model_size_bits / cfg.edge_rate_bps
+    e_cloud = cfg.edge_power_w * t_cloud
+    bm = billed.astype(f32)
+
+    # -- association / frontier health
+    edge_load = jnp.sum(assoc, axis=0).astype(jnp.int32)        # (M,)
+    if cand is not None:
+        valid_frac = jnp.mean(cand.valid.astype(f32))
+        matched = assigned >= 0
+        slot = jnp.argmax(
+            (cand.idx == jnp.maximum(assigned, 0)[:, None]), axis=1)
+        last = matched & (slot == cand.idx.shape[1] - 1)
+        frontier_sat = jnp.sum(last.astype(f32)) \
+            / jnp.maximum(jnp.sum(matched.astype(f32)), 1.0)
+    else:
+        cov = dist <= coverage_radius_m
+        if avail is not None:
+            cov = cov & (avail > 0)[:, None]
+        valid_frac = jnp.mean(cov.astype(f32))
+        frontier_sat = jnp.asarray(0.0, f32)
+
+    iters, residual, z_relaxed = sched
+    return RoundTrace(
+        round=round_idx.astype(jnp.int32),
+        time_local_s=(tau2 * jnp.max(bm * t_cmp)).astype(f32),
+        time_uplink_s=(tau2 * jnp.max(bm * t_com)).astype(f32),
+        time_cloud_s=(t_cloud * any_edge).astype(f32),
+        energy_local_j=(tau2 * jnp.sum(bm * e_cmp)).astype(f32),
+        energy_uplink_j=(tau2 * jnp.sum(bm * e_com)).astype(f32),
+        energy_cloud_j=(e_cloud * jnp.sum(z)).astype(f32),
+        assoc_sweeps=sweeps.astype(jnp.int32),
+        edge_load=edge_load,
+        frontier_valid_frac=valid_frac.astype(f32),
+        frontier_saturation=frontier_sat.astype(f32),
+        pdd_iters=iters.astype(jnp.int32),
+        pdd_residual=residual.astype(f32),
+        z_relaxed=z_relaxed.astype(f32),
+        sic_depth=jnp.max(edge_load).astype(jnp.int32),
+        stale_hist=staleness_histogram(staleness))
