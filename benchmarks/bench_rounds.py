@@ -49,6 +49,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, median_ms, median_rps, provenance
+from repro import scenarios
 from repro.configs.hfl_mnist import CONFIG
 from repro.core import (aggregation, association, cost, engine, fuzzy, noma,
                         pdd)
@@ -69,6 +70,12 @@ SPEC = engine.EngineSpec(policy="gcea", scheduler="fastest")
 # the legacy hot path (PR-1..3): serial while-loop resolver, pairwise SIC
 SPEC_SERIAL = dataclasses.replace(SPEC, resolver="serial",
                                   sic_impl="pairwise")
+# the semi-async buffered engine (DESIGN.md §11): same spec, micro-steps
+SPEC_BUFFERED = dataclasses.replace(SPEC, engine_mode="buffered")
+# async A/B scenarios: churny worlds where the sync barrier pays its
+# straggler tail every round (the buffered engine's home turf)
+AB_SCENARIOS = ("flash_crowd", "markov_dropout")
+AB_SIZE = (1024, 16)
 
 
 def _cfg(n: int, m: int):
@@ -257,6 +264,13 @@ def bench_size(n: int, m: int, *, eager_rounds: int, scan_rounds: int,
         scan_rounds)
     out["scanned_rps"] = round(scanned_rps, 3)
 
+    # -- buffered: the semi-async micro-step engine, same scanned driver ----
+    #    (micro-steps/sec — a compile-structure gate like scanned_rps, not a
+    #    round-for-round comparison; the virtual A/B lives in async_ab)
+    out["buffered_rps"] = round(median_rps(
+        lambda: engine.run_scanned(cfg, SPEC_BUFFERED, state, bundle,
+                                   scan_rounds), scan_rounds), 3)
+
     # -- telemetry-enabled scanned driver: the in-scan RoundTrace rides the
     #    scan outputs; its overhead at 1024×16 is the acceptance number
     if (n, m) == (1024, 16):
@@ -307,6 +321,56 @@ def bench_size(n: int, m: int, *, eager_rounds: int, scan_rounds: int,
     return out
 
 
+def async_ab(n: int, m: int, *, scenario: str, sync_rounds: int,
+             micro_steps: int) -> Dict[str, float]:
+    """Sync-vs-buffered A/B under a churny scenario (DESIGN.md §11).
+
+    The acceptance number is VIRTUAL round throughput — aggregations per
+    simulated second, the quantity the semi-async refactor exists to move:
+
+    * sync     — global rounds / Σ per-round barrier time (Eq. 18), i.e.
+      every round pays max-over-selected-clients + the cloud hop;
+    * buffered — cloud merges / final virtual clock: a merge fires when
+      ``buffer_fill`` staleness-weighted updates land, so its period
+      tracks the cohort's MEDIAN duration, not its straggler tail.
+
+    Wall-clock micro-steps/sec ride along for the compile-cost view.
+    """
+    cfg = _cfg(n, m)
+    sspec = scenarios.preset(scenario)
+    state, bundle, _ = engine.init_simulation(cfg, seed=0, scenario=sspec)
+    spec_s = dataclasses.replace(SPEC, scenario=sspec.engine_kind())
+    spec_b = dataclasses.replace(spec_s, engine_mode="buffered")
+
+    _, ms = jax.block_until_ready(
+        engine.run_scanned(cfg, spec_s, state, bundle, sync_rounds))
+    sync_virtual_s = float(np.sum(np.asarray(ms.total_time_s)))
+    sync_vrps = sync_rounds / max(sync_virtual_s, 1e-9)
+    sync_wall = median_rps(
+        lambda: engine.run_scanned(cfg, spec_s, state, bundle, sync_rounds),
+        sync_rounds)
+
+    fs, _ = jax.block_until_ready(
+        engine.run_scanned(cfg, spec_b, state, bundle, micro_steps))
+    merges = int(fs.buffer.version)
+    virtual_s = float(fs.buffer.clock_s)
+    buf_vrps = merges / max(virtual_s, 1e-9)
+    buf_wall = median_rps(
+        lambda: engine.run_scanned(cfg, spec_b, state, bundle, micro_steps),
+        micro_steps)
+    return {
+        "sync_rounds": sync_rounds,
+        "micro_steps": micro_steps,
+        "sync_virtual_rps": round(sync_vrps, 4),
+        "buffered_merges": merges,
+        "buffered_virtual_s": round(virtual_s, 3),
+        "buffered_virtual_rps": round(buf_vrps, 4),
+        "virtual_speedup": round(buf_vrps / max(sync_vrps, 1e-9), 3),
+        "sync_wall_rps": round(sync_wall, 3),
+        "buffered_wall_rps": round(buf_wall, 3),
+    }
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -334,6 +398,17 @@ def main(argv=None) -> None:
         emit(f"rounds_n{n}_m{m}", 1e6 / r["scanned_rps"],
              {k: v for k, v in r.items()
               if k not in ("stages", "candidates")})
+
+    # -- semi-async A/B at the acceptance size (DESIGN.md §11) --------------
+    n, m = AB_SIZE
+    ab: Dict[str, Dict[str, float]] = {}
+    for scen in AB_SCENARIOS:
+        ab[scen] = async_ab(n, m, scenario=scen,
+                            sync_rounds=4 if args.quick else 8,
+                            micro_steps=24 if args.quick else 64)
+        emit(f"async_ab_{scen}_n{n}_m{m}",
+             1e6 / max(ab[scen]["buffered_virtual_rps"], 1e-9), ab[scen])
+    results["async_ab"] = {"size": f"{n}x{m}", **ab}
 
     with open(OUT, "w") as fh:
         json.dump({"spec": dataclasses.asdict(SPEC),

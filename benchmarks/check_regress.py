@@ -1,9 +1,11 @@
 """Perf-regression gate: a fresh quick bench vs the committed baseline.
 
-Re-measures the scanned round-engine driver (``engine.run_scanned`` with
-``bench_rounds.SPEC``) at the quick sizes and compares each size's
-rounds/sec against the ``scanned_rps`` recorded in the committed
-``BENCH_rounds.json``.  A size REGRESSES when
+Re-measures the scanned round-engine drivers — the sync barrier engine
+(``bench_rounds.SPEC``) and the semi-async buffered engine
+(``bench_rounds.SPEC_BUFFERED``, DESIGN.md §11) — at the quick sizes and
+compares each size's rounds/sec against the ``scanned_rps`` /
+``buffered_rps`` columns recorded in the committed
+``BENCH_rounds.json``.  A column REGRESSES when
 
     fresh_rps < committed_rps * (1 - tol/100)
 
@@ -39,14 +41,22 @@ QUICK_SIZES = ((64, 4), (256, 8))
 FULL_SIZES = bench_rounds.SIZES                 # adds (1024, 16)
 
 
-def fresh_scanned_rps(n: int, m: int, rounds: int) -> float:
+# gated (column, spec) pairs: the sync scanned driver and the semi-async
+# buffered micro-step driver (DESIGN.md §11) — both are scan-compiled
+# programs whose rps collapses on the same structural regressions
+COLUMNS = (("scanned_rps", bench_rounds.SPEC),
+           ("buffered_rps", bench_rounds.SPEC_BUFFERED))
+
+
+def fresh_scanned_rps(n: int, m: int, rounds: int,
+                      spec=bench_rounds.SPEC) -> float:
     """The scanned driver's median rounds/sec at (n, m) — the same spec,
     config shape and statistic ``bench_rounds`` records."""
     cfg = bench_rounds._cfg(n, m)
     state, bundle, _ = engine.init_simulation(cfg, seed=0)
     return median_rps(
-        lambda: engine.run_scanned(cfg, bench_rounds.SPEC, state, bundle,
-                                   rounds), rounds)
+        lambda: engine.run_scanned(cfg, spec, state, bundle, rounds),
+        rounds)
 
 
 def check(bench_path: str = BENCH, tol_pct: float = 30.0,
@@ -63,25 +73,28 @@ def check(bench_path: str = BENCH, tol_pct: float = 30.0,
     }
     for n, m in sizes:
         key = f"{n}x{m}"
-        base = committed.get("results", {}).get(key, {}).get("scanned_rps")
-        if base is None:
-            report["sizes"][key] = {"status": "no-baseline"}
-            continue
-        fresh = fresh_scanned_rps(n, m, rounds)
-        floor = base * (1.0 - tol_pct / 100.0)
-        ok = fresh >= floor
-        report["sizes"][key] = {
-            "committed_rps": base,
-            "fresh_rps": round(fresh, 3),
-            "floor_rps": round(floor, 3),
-            "ratio": round(fresh / base, 3),
-            "status": "ok" if ok else "REGRESSED",
-        }
-        if not ok:
-            report["regressed"].append(key)
-        print(f"{key}: fresh {fresh:.2f} rps vs committed {base:.2f} "
-              f"(floor {floor:.2f}) -> "
-              f"{report['sizes'][key]['status']}", flush=True)
+        row = committed.get("results", {}).get(key, {})
+        report["sizes"][key] = {}
+        for col, spec in COLUMNS:
+            base = row.get(col)
+            if base is None:
+                report["sizes"][key][col] = {"status": "no-baseline"}
+                continue
+            fresh = fresh_scanned_rps(n, m, rounds, spec)
+            floor = base * (1.0 - tol_pct / 100.0)
+            ok = fresh >= floor
+            report["sizes"][key][col] = {
+                "committed_rps": base,
+                "fresh_rps": round(fresh, 3),
+                "floor_rps": round(floor, 3),
+                "ratio": round(fresh / base, 3),
+                "status": "ok" if ok else "REGRESSED",
+            }
+            if not ok:
+                report["regressed"].append(f"{key}:{col}")
+            print(f"{key} {col}: fresh {fresh:.2f} rps vs committed "
+                  f"{base:.2f} (floor {floor:.2f}) -> "
+                  f"{report['sizes'][key][col]['status']}", flush=True)
     report["ok"] = not report["regressed"]
     return report
 

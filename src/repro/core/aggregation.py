@@ -75,3 +75,59 @@ def broadcast_to_clients(params: Params, assoc: jnp.ndarray,
 def replicate(params: Params, n: int) -> Params:
     """Tile a single model into a stacked (n, ...) pytree."""
     return jax.tree.map(lambda l: jnp.broadcast_to(l[None], (n,) + l.shape), params)
+
+
+# ---------------------------------------------------------------------------
+# Staleness-weighted aggregation buffer (DESIGN.md §11)
+#
+# The buffered engine replaces the semi-synchronous Eq. 17 barrier with a
+# FedBuff-style running buffer: client updates land as weighted DELTAS
+# (trained params minus the global model they pulled) whenever their
+# virtual finish time passes, and the cloud applies the weighted-mean
+# delta on a fill-or-timeout trigger.  The three functions below are that
+# buffer's whole algebra: zero, accumulate, apply — all pure tree maps, so
+# the buffer rides the scan carry like any other pytree.
+# ---------------------------------------------------------------------------
+
+def buffer_zeros(params: Params) -> Params:
+    """A zeroed delta accumulator shaped like the global model."""
+    return jax.tree.map(jnp.zeros_like, params)
+
+
+def buffer_accumulate(delta_sum: Params, weight_sum: jnp.ndarray,
+                      deltas: Params, weights: jnp.ndarray
+                      ) -> tuple:
+    """Fold a batch of per-client deltas into the buffer.
+
+    deltas: leaves (N, ...); weights (N,) — zero for clients that did not
+    land this micro-step (their pending delta contributes nothing).
+    Returns (delta_sum', weight_sum').
+    """
+
+    def add(acc, d):
+        w = weights.reshape((-1,) + (1,) * (d.ndim - 1)).astype(d.dtype)
+        return acc + jnp.sum(d * w, axis=0)
+
+    return (jax.tree.map(add, delta_sum, deltas),
+            weight_sum + jnp.sum(weights))
+
+
+def buffer_apply(global_params: Params, delta_sum: Params,
+                 weight_sum: jnp.ndarray, lr: float,
+                 apply_mask: jnp.ndarray) -> Params:
+    """The trigger: global' = global + lr · Σw·Δ / Σw  when ``apply_mask``
+    (and the buffer is non-empty), else the global model unchanged.
+
+    Dividing by ``weight_sum`` makes the EFFECTIVE per-update weights
+    w_n / Σw sum to exactly 1 — the buffered merge is a weighted mean of
+    deltas, invariant to a common rescaling of the raw weights (pinned by
+    tests/test_buffered.py).
+    """
+    ok = apply_mask & (weight_sum > 0)
+    denom = jnp.maximum(weight_sum, 1e-12)
+
+    def upd(g, d):
+        return jnp.where(ok, g + jnp.asarray(lr, g.dtype)
+                         * d.astype(g.dtype) / denom.astype(g.dtype), g)
+
+    return jax.tree.map(upd, global_params, delta_sum)

@@ -23,6 +23,7 @@ class RoundCost(NamedTuple):
     per_edge_energy_j: jnp.ndarray   # (M,) E_m^cloud + E^edge_{N_m}
     client_time_s: jnp.ndarray       # (N,) per-edge-iteration t_cmp + t_com
     rates_bps: jnp.ndarray           # (N,) NOMA uplink rates
+    client_energy_j: jnp.ndarray     # (N,) per-edge-iteration e_cmp + e_com
 
 
 def local_compute(cfg, f_hz: jnp.ndarray, n_samples: jnp.ndarray,
@@ -151,7 +152,33 @@ def apply_schedule(cfg, rc: RoundCost, z: jnp.ndarray) -> RoundCost:
     total_energy = jnp.sum(z * rc.per_edge_energy_j)
     c = cfg.lambda_t * total_time + cfg.lambda_e * total_energy
     return RoundCost(total_time, total_energy, c, rc.per_edge_time_s,
-                     rc.per_edge_energy_j, rc.client_time_s, rc.rates_bps)
+                     rc.per_edge_energy_j, rc.client_time_s, rc.rates_bps,
+                     rc.client_energy_j)
+
+
+def cohort_cost(cfg, rc: RoundCost, cohort: jnp.ndarray, dt_s: jnp.ndarray,
+                fired: jnp.ndarray) -> RoundCost:
+    """The buffered engine's per-MICRO-step bill (DESIGN.md §11).
+
+    With the semi-synchronous barrier gone there is no per-round max over
+    edges: a micro-step's time charge is the VIRTUAL-clock advance ``dt_s``
+    (to the next completion event or the timeout edge), its energy charge
+    is the admitted ``cohort``'s τ₂-scaled local+uplink energy (the same
+    per-client Eq. 5/10 terms the barrier bill sums) plus one Eq. 16
+    edge→cloud hop whenever the fill-or-timeout trigger ``fired`` — the
+    buffered merge is one cloud exchange.  Summed over micro-steps the two
+    engines charge the same per-client work terms; only the barrier's
+    straggler time is gone, which is the point.
+    """
+    tau2 = cfg.tau2
+    e_cloud = cfg.edge_power_w * cfg.edge_model_size_bits / cfg.edge_rate_bps
+    energy = tau2 * jnp.sum(cohort.astype(jnp.float32)
+                            * rc.client_energy_j) \
+        + fired.astype(jnp.float32) * e_cloud
+    c = cfg.lambda_t * dt_s + cfg.lambda_e * energy
+    return RoundCost(dt_s, energy, c, rc.per_edge_time_s,
+                     rc.per_edge_energy_j, rc.client_time_s, rc.rates_bps,
+                     rc.client_energy_j)
 
 
 def round_cost(cfg, *, power_w: jnp.ndarray, f_hz: jnp.ndarray,
@@ -210,4 +237,4 @@ def round_cost(cfg, *, power_w: jnp.ndarray, f_hz: jnp.ndarray,
     total_energy = jnp.sum(z * edge_total_energy)
     cost = cfg.lambda_t * total_time + cfg.lambda_e * total_energy
     return RoundCost(total_time, total_energy, cost, edge_total_time,
-                     edge_total_energy, client_time, rates)
+                     edge_total_energy, client_time, rates, client_energy)

@@ -90,6 +90,24 @@ class EngineSpec:
     # the lowered program and every output are bit-identical to the
     # telemetry-less engine (golden parity holds un-re-recorded).
     telemetry: bool = False
+    # semi-async buffered round engine (DESIGN.md §11).  "sync" is the
+    # paper's semi-synchronous barrier — bit-for-bit today's program, with
+    # the aggregation buffer STRUCTURALLY absent from the carry.
+    # "buffered" turns ``round_step`` into a MICRO-step: each scan step
+    # admits one TiFL-style speed-tier cohort through the same fuzzy/
+    # candidate/association pipeline, trains it, and lands its
+    # staleness-weighted model deltas in a FedBuff aggregation buffer at
+    # their per-client Eq. 13/15 virtual finish times; the cloud applies
+    # the buffered merge when ``buffer_fill`` updates landed OR
+    # ``timeout_s`` of virtual time elapsed since the last aggregation —
+    # round throughput becomes buffer-drain rate instead of
+    # min-over-clients.
+    engine_mode: str = "sync"       # sync | buffered
+    buffer_fill: int = 0            # 0 = auto: (quota · M) // 2
+    timeout_s: float = 10.0         # virtual seconds between forced merges
+    n_tiers: int = 4                # TiFL speed tiers (1 = no tiering)
+    retier_every: int = 8           # micro-steps between quantile retiers
+    buffer_lr: float = 1.0          # server step on the merged mean delta
 
 
 class RoundBundle(NamedTuple):
@@ -102,6 +120,27 @@ class RoundBundle(NamedTuple):
     test_y: jnp.ndarray      # (T,)
 
 
+class BufferState(NamedTuple):
+    """The buffered engine's extra scan carry (DESIGN.md §11): the FedBuff
+    aggregation buffer + the per-client in-flight bookkeeping + the TiFL
+    tier table.  Lives in ``RoundState.buffer`` on the buffered path and
+    is ``None`` (structurally absent — zero leaves, zero program bytes)
+    in ``engine_mode="sync"``."""
+    pending_delta: Params    # (N, ...) trained-minus-pulled model deltas
+    finish_s: jnp.ndarray    # (N,) f32 absolute virtual completion times
+    in_flight: jnp.ndarray   # (N,) bool — admitted, not yet landed
+    pulled_ver: jnp.ndarray  # (N,) int32 global version at admission
+    obs_s: jnp.ndarray       # (N,) f32 EMA of measured finish durations
+    tier: jnp.ndarray        # (N,) int32 TiFL speed tier (0 = fastest)
+    delta_sum: Params        # global-shaped Σ w·Δ accumulator
+    weight_sum: jnp.ndarray  # () f32 Σ w over buffered updates
+    fill: jnp.ndarray        # () int32 updates landed since last trigger
+    version: jnp.ndarray     # () int32 cloud aggregation count
+    clock_s: jnp.ndarray     # () f32 virtual wall clock
+    last_agg_s: jnp.ndarray  # () f32 clock at the last trigger
+    step: jnp.ndarray        # () int32 micro-step counter
+
+
 class RoundState(NamedTuple):
     """Everything that evolves across global rounds."""
     global_params: Params    # cloud model
@@ -111,6 +150,7 @@ class RoundState(NamedTuple):
     key: jnp.ndarray         # PRNG key
     round_idx: jnp.ndarray   # () int32
     scenario: ScenarioState  # per-round world state (DESIGN.md §6)
+    buffer: Any = None       # BufferState | None (DESIGN.md §11)
 
 
 class RoundMetrics(NamedTuple):
@@ -160,6 +200,58 @@ def quota_for(cfg, spec: EngineSpec) -> int:
     if spec.noma_enabled:
         return cfg.clients_per_edge
     return max(1, int(cfg.clients_per_edge * spec.oma_quota_factor))
+
+
+def buffer_fill_for(cfg, spec: EngineSpec) -> int:
+    """The fill half of the fill-or-timeout trigger.  ``buffer_fill=0``
+    resolves to half the per-micro-step admission capacity (quota · M),
+    so in steady state the trigger fires well before a whole cohort's
+    straggler tail lands."""
+    if spec.buffer_fill > 0:
+        return int(spec.buffer_fill)
+    return max(1, (quota_for(cfg, spec) * cfg.n_edges) // 2)
+
+
+def init_buffer(cfg, spec: EngineSpec, state: "RoundState") -> BufferState:
+    """A fresh (empty) aggregation buffer shaped for ``state``'s models.
+    Tiers start round-robin over clients (balanced cohorts before any
+    finish time has been observed); the first quantile retier replaces
+    them with measured-speed tiers."""
+    n = cfg.n_clients
+    f32, i32 = jnp.float32, jnp.int32
+    return BufferState(
+        pending_delta=jax.tree.map(jnp.zeros_like, state.client_params),
+        finish_s=jnp.zeros((n,), f32),
+        in_flight=jnp.zeros((n,), bool),
+        pulled_ver=jnp.zeros((n,), i32),
+        obs_s=jnp.zeros((n,), f32),
+        tier=jnp.arange(n, dtype=i32) % max(1, int(spec.n_tiers)),
+        delta_sum=aggregation.buffer_zeros(state.global_params),
+        weight_sum=jnp.zeros((), f32),
+        fill=jnp.zeros((), i32),
+        version=jnp.zeros((), i32),
+        clock_s=jnp.zeros((), f32),
+        last_agg_s=jnp.zeros((), f32),
+        step=jnp.zeros((), i32))
+
+
+def ensure_buffer(cfg, spec: EngineSpec, state: "RoundState") -> "RoundState":
+    """Normalise ``state.buffer`` to the spec's engine mode: attach a
+    fresh buffer for ``engine_mode="buffered"`` (keeping one that is
+    already there, e.g. mid-scan), strip it for "sync" so the sync carry
+    — and with it every golden program — stays structurally identical to
+    the pre-buffer engine.  The check is on the pytree STRUCTURE (None or
+    not), so it is trace-time static and jit-safe."""
+    if spec.engine_mode == "buffered":
+        if state.buffer is None:
+            return state._replace(buffer=init_buffer(cfg, spec, state))
+        return state
+    if spec.engine_mode != "sync":
+        raise ValueError(f"unknown engine_mode {spec.engine_mode!r}; "
+                         f"choose 'sync' or 'buffered'")
+    if state.buffer is not None:
+        return state._replace(buffer=None)
+    return state
 
 
 # ---------------------------------------------------------------------------
@@ -416,11 +508,14 @@ def _schedule(cfg, spec: EngineSpec, rc_all: cost.RoundCost) -> jnp.ndarray:
     return _schedule_traced(cfg, spec, rc_all)[0]
 
 
-def _train(cfg, spec: EngineSpec, model: MLPClassifier, key,
-           state: RoundState, bundle: RoundBundle, assoc, z
-           ) -> Tuple[Params, Params]:
-    """τ₂ × (τ₁ local SGD + edge aggregation) as a lax.scan, then the
-    semi-synchronous cloud aggregation (Eqs. 11, 17).
+def _train_cohort(cfg, spec: EngineSpec, model: MLPClassifier, key,
+                  state: RoundState, bundle: RoundBundle, assoc
+                  ) -> Tuple[Params, Params]:
+    """τ₂ × (τ₁ local SGD + edge aggregation) as a lax.scan (Eqs. 11, 13)
+    — the per-cohort training stage shared by the sync round (which cloud-
+    aggregates the result, ``_train``) and the buffered micro-step (which
+    buffers the cohort's per-client deltas instead, DESIGN.md §11).
+    Returns ``(client_params, edge_params)``.
 
     At most ``quota · M`` clients are ever admitted (a static bound), so
     when that is smaller than N the local-SGD stage gathers the admitted
@@ -476,7 +571,17 @@ def _train(cfg, spec: EngineSpec, model: MLPClassifier, key,
     ks = jax.random.split(key, cfg.tau2)
     (client_params, edge_params), _ = jax.lax.scan(
         edge_iter, (client_params, edge_params), ks)
+    return client_params, edge_params
 
+
+def _train(cfg, spec: EngineSpec, model: MLPClassifier, key,
+           state: RoundState, bundle: RoundBundle, assoc, z
+           ) -> Tuple[Params, Params]:
+    """``_train_cohort`` followed by the semi-synchronous cloud
+    aggregation (Eq. 17) — the sync engine's training stage."""
+    client_params, edge_params = _train_cohort(cfg, spec, model, key,
+                                               state, bundle, assoc)
+    counts = bundle.counts
     edge_data = jnp.sum(assoc * counts[:, None], axis=0)      # (M,)
     z_eff = z * (edge_data > 0).astype(z.dtype)
     agg = aggregation.cloud_aggregate(edge_params, z_eff, edge_data)
@@ -506,6 +611,224 @@ def round_keys(spec: EngineSpec, key) -> Tuple[jnp.ndarray, ...]:
     return key, None, k_fade, k_assoc, k_alloc, k_train
 
 
+def _buffered_step(cfg, spec: EngineSpec, state: RoundState,
+                   bundle: RoundBundle,
+                   actor_params: Optional[Params] = None
+                   ) -> Tuple[RoundState, RoundMetrics]:
+    """One buffered MICRO-step (DESIGN.md §11) — the semi-async engine's
+    scan body.  Same shape contract as the sync ``round_step``: it returns
+    ``(state', RoundMetrics)`` (or the telemetry pair), but the step
+    semantics are event-driven:
+
+    1. gate the market to the idle clients of the current TiFL speed tier
+       and run the UNCHANGED fuzzy/candidate/association/allocation
+       pipeline on that cohort;
+    2. train the admitted cohort (``_train_cohort``) and park its
+       per-client model deltas as in-flight with Eq. 13/15 virtual finish
+       times;
+    3. advance the virtual clock to the next completion event (or the
+       timeout deadline), land every finished update in the FedBuff
+       buffer with staleness weight w(a)=a^{-1/2} · D_n;
+    4. fire the cloud merge when the buffer holds ``buffer_fill`` updates
+       OR ``timeout_s`` elapsed since the last merge;
+    5. every ``retier_every`` micro-steps, recompute quantile speed tiers
+       from the per-client duration EMA (TiFL).
+
+    ``metrics.total_time_s`` is the virtual-clock advance dt (not a
+    barrier max), ``metrics.z`` broadcasts the trigger bit, and
+    ``metrics.round`` counts micro-steps.
+    """
+    model = MLPClassifier(cfg.input_dim, cfg.hidden, cfg.n_classes)
+    buf: BufferState = state.buffer
+    n = cfg.n_clients
+    f32, i32 = jnp.float32, jnp.int32
+    n_tiers = max(1, int(spec.n_tiers))
+
+    # 0. scenario transition + fading — identical preamble to the sync
+    #    round (same round_keys layout, so the per-step PRNG stream is
+    #    comparable across engines).
+    dynamic = spec.scenario != "static"
+    key, k_scen, k_fade, k_assoc, k_alloc, k_train = round_keys(spec,
+                                                                state.key)
+    if dynamic:
+        scen = scenarios.advance(cfg, spec.scenario, k_scen, state.scenario)
+        dist, avail = scen.dist, scen.avail
+    else:
+        scen = state.scenario
+        dist, avail = bundle.dist, jnp.ones((n,), f32)
+    gains = noma.evolve_gains(k_fade, state.gains, dist,
+                              path_loss_exponent=cfg.path_loss_exponent,
+                              rho=spec.fading_rho)
+
+    # 1. TiFL cohort gate: only idle clients of the scheduled tier enter
+    #    the association market this micro-step, so every cohort is
+    #    speed-coherent and the buffer drains in waves instead of one
+    #    straggler-paced front.
+    cur_tier = jnp.mod(buf.step, n_tiers)
+    eligible = ((~buf.in_flight) & (buf.tier == cur_tier)).astype(f32) \
+        * avail
+    with _stage("associate"):
+        cand = _build_candidates(cfg, spec, dist, eligible)
+        sweeps = None
+        if cand is not None:
+            out = _associate(cfg, spec, k_assoc, gains, dist,
+                             bundle.counts, state.staleness, eligible,
+                             cand, with_sweeps=spec.telemetry)
+            assigned = out
+            if spec.telemetry:
+                assigned, sweeps = out
+            assoc = candidates.assigned_one_hot(
+                assigned, cfg.n_edges).astype(f32)
+        else:
+            assigned = None
+            assoc = _associate(cfg, spec, k_assoc, gains, dist,
+                               bundle.counts, state.staleness, eligible,
+                               with_sweeps=spec.telemetry)
+            if spec.telemetry:
+                assoc, sweeps = assoc
+            assoc = assoc.astype(f32) * eligible[:, None]
+    with _stage("allocate"):
+        p, f = _allocate(cfg, spec, k_alloc, assoc, gains, bundle.counts,
+                         actor_params, scen if dynamic else None, dist,
+                         assigned)
+        if dynamic:
+            p = jnp.minimum(p, scen.p_max_w)
+            f = jnp.minimum(f, scen.f_max_hz)
+
+    # 2. per-client Eq. 13/15 surface at z=1 — the buffered engine never
+    #    schedules edges (no barrier to prune); it reads the per-client
+    #    time/energy columns for finish times and the cohort bill.
+    with _stage("schedule"):
+        rc_all = cost.round_cost(cfg, power_w=p, f_hz=f, gains=gains,
+                                 assoc=assoc, z=jnp.ones((cfg.n_edges,)),
+                                 n_samples=bundle.counts,
+                                 noma_enabled=spec.noma_enabled,
+                                 capacitance=scen.kappa if dynamic else None,
+                                 sic_impl=spec.sic_impl,
+                                 sic_max_per_edge=quota_for(cfg, spec),
+                                 assigned=assigned)
+    admitted = jnp.sum(assoc, axis=1) > 0                    # (N,) bool
+
+    # 3. train the cohort from the CURRENT global model and park its
+    #    deltas in flight.  The admitted client's update is its trained
+    #    edge model minus the global it pulled (anchored NOW, while the
+    #    pull version is current) — it lands in the buffer later, at its
+    #    virtual finish time, possibly several merges stale.
+    with _stage("train"):
+        client_params, _ = _train_cohort(cfg, spec, model, k_train, state,
+                                         bundle, assoc)
+
+    def _mask(m, leaf):
+        return m.reshape((-1,) + (1,) * (leaf.ndim - 1))
+
+    pending = jax.tree.map(
+        lambda pd, c, g: jnp.where(_mask(admitted, c), c - g[None], pd),
+        buf.pending_delta, client_params, state.global_params)
+    # modelled wall duration: τ₂ edge iterations + the edge→cloud hop
+    dur = cfg.tau2 * rc_all.client_time_s \
+        + cfg.edge_model_size_bits / cfg.edge_rate_bps
+    finish = jnp.where(admitted, buf.clock_s + dur, buf.finish_s)
+    in_flight = buf.in_flight | admitted
+    pulled = jnp.where(admitted, buf.version, buf.pulled_ver)
+    obs = jnp.where(admitted,
+                    jnp.where(buf.obs_s > 0.0,
+                              0.5 * buf.obs_s + 0.5 * dur, dur),
+                    buf.obs_s)
+
+    # 4. event-driven clock: jump to the earliest in-flight completion or
+    #    the timeout deadline, whichever is sooner (never backwards).
+    inf = jnp.asarray(jnp.finfo(jnp.float32).max, f32)
+    next_fin = jnp.min(jnp.where(in_flight, finish, inf))
+    deadline = buf.last_agg_s + jnp.asarray(spec.timeout_s, f32)
+    target = jnp.where(jnp.any(in_flight),
+                       jnp.minimum(next_fin, deadline), deadline)
+    clock = jnp.maximum(buf.clock_s, target)
+    dt = clock - buf.clock_s
+
+    # 5. land every completed update with its staleness weight
+    eps = jnp.asarray(1e-5, f32)
+    landed = in_flight & (finish <= clock + eps)
+    age = staleness.buffer_age(buf.version, pulled)
+    w = jnp.where(landed,
+                  staleness.buffer_weight(age) * bundle.counts, 0.0)
+    delta_sum, weight_sum = aggregation.buffer_accumulate(
+        buf.delta_sum, buf.weight_sum, pending, w)
+    fill = buf.fill + jnp.sum(landed, dtype=i32)
+    in_flight = in_flight & ~landed
+
+    # 6. fill-or-timeout trigger → staleness-weighted buffered merge.
+    #    ``applied`` (merge actually changed the model) gates the version
+    #    bump and the cloud-hop energy; ``fired`` alone resets the timer,
+    #    so an empty timeout does not freeze the clock.
+    fill_target = buffer_fill_for(cfg, spec)
+    timed_out = clock >= deadline - eps
+    fired = (fill >= fill_target) | timed_out
+    applied = fired & (weight_sum > 0.0)
+    global_params = aggregation.buffer_apply(
+        state.global_params, delta_sum, weight_sum, spec.buffer_lr, fired)
+    delta_sum = jax.tree.map(
+        lambda d: jnp.where(fired, jnp.zeros_like(d), d), delta_sum)
+    weight_sum = jnp.where(fired, 0.0, weight_sum)
+    fill_after = jnp.where(fired, 0, fill)
+    version = buf.version + applied.astype(i32)
+    last_agg = jnp.where(fired, clock, buf.last_agg_s)
+
+    # 7. TiFL retier cadence: quantile tiers over the duration EMA
+    #    (rank · n_tiers // N ∈ [0, n_tiers)); unmeasured clients sort
+    #    first, i.e. optimistically fast.
+    step1 = buf.step + 1
+    do_retier = jnp.mod(step1, max(1, int(spec.retier_every))) == 0
+    rank = jnp.argsort(jnp.argsort(obs))
+    tier = jnp.where(do_retier,
+                     ((rank * n_tiers) // n).astype(i32), buf.tier)
+
+    # 8. Eq. 20 per micro-step: landing in the buffer is this engine's
+    #    "orchestrated" event — landed clients reset to 1, everyone else
+    #    saturating-increments, so a drained client re-enters fresh.
+    new_stale = staleness.update_staleness(state.staleness, landed)
+
+    rc = cost.cohort_cost(cfg, rc_all, admitted, dt, applied)
+    round_idx = state.round_idx + 1
+    with _stage("eval"):
+        accuracy = model.accuracy(global_params, bundle.test_x,
+                                  bundle.test_y)
+        loss = model.loss(global_params, (bundle.test_x, bundle.test_y))
+    metrics = RoundMetrics(
+        round=round_idx,
+        accuracy=accuracy,
+        loss=loss,
+        avg_staleness=jnp.mean(new_stale.astype(f32)),
+        total_time_s=dt,
+        total_energy_j=rc.total_energy_j,
+        cost=rc.cost,
+        n_associated=jnp.sum(admitted.astype(i32)),
+        n_available=jnp.sum((eligible > 0).astype(i32)),
+        z=applied.astype(f32) * jnp.ones((cfg.n_edges,)))
+    new_buf = BufferState(
+        pending_delta=pending, finish_s=finish, in_flight=in_flight,
+        pulled_ver=pulled, obs_s=obs, tier=tier, delta_sum=delta_sum,
+        weight_sum=weight_sum, fill=fill_after, version=version,
+        clock_s=clock, last_agg_s=last_agg, step=step1)
+    new_state = RoundState(global_params, client_params, gains, new_stale,
+                           key, round_idx, scen, new_buf)
+    if spec.telemetry:
+        cause = jnp.where(fired,
+                          jnp.where(fill >= fill_target, 1, 2),
+                          0).astype(i32)
+        tr = telemetry.round_trace(
+            cfg, spec, round_idx=round_idx, rc_all=rc_all,
+            z=metrics.z, assoc=assoc, power_w=p, f_hz=f,
+            counts=bundle.counts, staleness=new_stale,
+            capacitance=scen.kappa if dynamic else None,
+            sweeps=sweeps, sched=None, cand=cand, assigned=assigned,
+            dist=dist, avail=avail if dynamic else None,
+            coverage_radius_m=coverage_radius(cfg),
+            buffer=(fill, cause, cur_tier,
+                    jnp.sum((eligible > 0).astype(i32))))
+        return new_state, (metrics, tr)
+    return new_state, metrics
+
+
 def round_step(cfg, spec: EngineSpec, state: RoundState,
                bundle: RoundBundle, actor_params: Optional[Params] = None
                ) -> Tuple[RoundState, RoundMetrics]:
@@ -513,7 +836,15 @@ def round_step(cfg, spec: EngineSpec, state: RoundState,
 
     Returns ``(state', RoundMetrics)`` — or, with ``spec.telemetry``,
     ``(state', (RoundMetrics, telemetry.RoundTrace))``; ``split_output``
-    normalises the two shapes for generic callers."""
+    normalises the two shapes for generic callers.
+
+    With ``spec.engine_mode="buffered"`` the step is a semi-async
+    MICRO-step (``_buffered_step``); "sync" (the default) is the paper's
+    semi-synchronous barrier round, bit-for-bit the pre-buffer program
+    (``ensure_buffer`` keeps the buffer structurally absent)."""
+    state = ensure_buffer(cfg, spec, state)
+    if spec.engine_mode == "buffered":
+        return _buffered_step(cfg, spec, state, bundle, actor_params)
     model = MLPClassifier(cfg.input_dim, cfg.hidden, cfg.n_classes)
 
     # 0. scenario transition (DESIGN.md §6).  The static kind keeps the
@@ -636,6 +967,12 @@ round_step_jit = jax.jit(round_step, static_argnums=(0, 1))
 
 
 def _scan_rounds(cfg, spec, state, bundle, n_rounds, actor_params):
+    # normalise the carry BEFORE the scan so its pytree structure is
+    # fixed: buffered runs enter with the aggregation buffer attached,
+    # sync runs with it structurally absent (a no-op on a plain sync
+    # state — golden programs are untouched).
+    state = ensure_buffer(cfg, spec, state)
+
     def step(s, _):
         return round_step(cfg, spec, s, bundle, actor_params)
 
@@ -780,10 +1117,24 @@ def _client_shardings(state: RoundState, bundle: RoundBundle,
     scen_sh = ScenarioState(
         pos=cl, waypoint=cl, speed=cl, avail=cl, p_drop=cl, p_return=cl,
         f_max_hz=cl, p_max_w=cl, kappa=cl, edges=rep, dist=cl)
+    buf_sh = None
+    if state.buffer is not None:
+        buf: BufferState = state.buffer
+        # per-client leaves split over ("clients",); the global-shaped
+        # delta accumulator and the scalar trigger state replicated —
+        # exactly the global-model layout, so the buffered merge lowers
+        # to the same all-reduce shape as the sync cloud aggregation.
+        buf_sh = BufferState(
+            pending_delta=jax.tree.map(lambda _: cl, buf.pending_delta),
+            finish_s=cl, in_flight=cl, pulled_ver=cl, obs_s=cl, tier=cl,
+            delta_sum=jax.tree.map(lambda _: rep, buf.delta_sum),
+            weight_sum=rep, fill=rep, version=rep, clock_s=rep,
+            last_agg_s=rep, step=rep)
     state_sh = RoundState(
         global_params=jax.tree.map(lambda _: rep, state.global_params),
         client_params=jax.tree.map(lambda _: cl, state.client_params),
-        gains=cl, staleness=cl, key=rep, round_idx=rep, scenario=scen_sh)
+        gains=cl, staleness=cl, key=rep, round_idx=rep, scenario=scen_sh,
+        buffer=buf_sh)
     bundle_sh = RoundBundle(dist=cl, x=cl, y=cl, counts=cl,
                             test_x=rep, test_y=rep)
     return state_sh, bundle_sh
@@ -841,6 +1192,18 @@ def pad_clients(cfg, state: RoundState, bundle: RoundBundle, multiple: int):
         gains=rep_last(state.gains),
         staleness=const(state.staleness, 0),
         scenario=scen)
+    if state.buffer is not None:
+        buf = state.buffer
+        # padded clients are idle forever: zero pending delta, tier 0 —
+        # being unavailable they never associate, so they never land.
+        state = state._replace(buffer=buf._replace(
+            pending_delta=jax.tree.map(lambda l: const(l, 0.0),
+                                       buf.pending_delta),
+            finish_s=const(buf.finish_s, 0.0),
+            in_flight=const(buf.in_flight, False),
+            pulled_ver=const(buf.pulled_ver, 0),
+            obs_s=const(buf.obs_s, 0.0),
+            tier=const(buf.tier, 0)))
     bundle = bundle._replace(
         dist=const(bundle.dist, far), x=rep_last(bundle.x),
         y=rep_last(bundle.y), counts=const(bundle.counts, 0.0))

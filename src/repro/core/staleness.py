@@ -1,17 +1,54 @@
-"""Model staleness tracking (paper Eq. 20).
+"""Model staleness tracking (paper Eq. 20) + buffered-engine weighting.
 
 A_n^i = A_n^{i-1} + 1 if client n was not orchestrated at round i-1, else 1.
+
+The counter saturates at ``STALENESS_MAX``: a long-horizon buffered run
+(DESIGN.md §11) advances the counter once per MICRO-step, so an int32
+counter left uncapped would eventually overflow and a permanently-idle
+client would walk off the fixed 8-bucket telemetry histogram's last
+(open-ended) bucket edge.  Above the cap the value carries no extra
+information — every consumer (fuzzy staleness normalisation, the FedBuff
+buffer weight, the histogram) treats "very stale" uniformly — so the
+saturating add changes no behaviour below it.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+# Saturation ceiling for the Eq. 20 counter.  Far above any horizon the
+# sweeps run (10⁶ micro-steps) yet far below int32 overflow; also the cap
+# fed to ``buffer_age`` so the staleness weight stays strictly positive.
+STALENESS_MAX = 1 << 20
+
 
 def update_staleness(staleness: jnp.ndarray, selected: jnp.ndarray
                      ) -> jnp.ndarray:
-    """staleness (N,) int; selected (N,) bool — selected clients reset to 1."""
-    return jnp.where(selected, 1, staleness + 1)
+    """staleness (N,) int; selected (N,) bool — selected clients reset to 1.
+
+    The +1 branch saturates at ``STALENESS_MAX`` (see module docstring).
+    """
+    return jnp.where(selected, 1,
+                     jnp.minimum(staleness + 1, STALENESS_MAX))
 
 
 def init_staleness(n_clients: int) -> jnp.ndarray:
     return jnp.ones((n_clients,), jnp.int32)
+
+
+def buffer_age(version: jnp.ndarray, pulled_version: jnp.ndarray
+               ) -> jnp.ndarray:
+    """FedBuff update age: how many cloud aggregations happened between a
+    client pulling the global model and its update landing in the buffer,
+    plus 1 so a fresh update has age 1 (weight 1).  Saturating like the
+    Eq. 20 counter."""
+    age = jnp.maximum(version - pulled_version, 0) + 1
+    return jnp.minimum(age, STALENESS_MAX)
+
+
+def buffer_weight(age: jnp.ndarray, *, exponent: float = 0.5
+                  ) -> jnp.ndarray:
+    """Polynomial staleness discount  w(a) = a^(-exponent)  (FedBuff's
+    s^(-1/2) at the default).  ``age`` ≥ 1, so w ∈ (0, 1] and a fresh
+    update (age 1) is undiscounted."""
+    a = jnp.maximum(age.astype(jnp.float32), 1.0)
+    return a ** jnp.float32(-exponent)

@@ -1,10 +1,11 @@
 from repro.scenarios.base import (PRESETS, TRANSITIONS, ScenarioSpec,
                                   ScenarioState, advance, advance_dynamic,
-                                  init_scenario, preset, register_transition,
+                                  flash_crowd_transition, init_scenario,
+                                  preset, register_transition,
                                   static_transition)
 
 __all__ = [
     "PRESETS", "TRANSITIONS", "ScenarioSpec", "ScenarioState", "advance",
-    "advance_dynamic", "init_scenario", "preset", "register_transition",
-    "static_transition",
+    "advance_dynamic", "flash_crowd_transition", "init_scenario", "preset",
+    "register_transition", "static_transition",
 ]

@@ -50,6 +50,7 @@ _MOBILE = "random_waypoint"
 _DROPOUT = "markov_dropout"
 _HETERO = "hetero_devices"
 _PARTS = (_MOBILE, _DROPOUT, _HETERO)
+_FLASH = "flash_crowd"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -149,7 +150,10 @@ def init_scenario(cfg, sspec: ScenarioSpec, rng: np.random.Generator,
         speed = np.zeros((n,), f32)
         waypoint = pos.copy()
 
-    if _DROPOUT in parts:
+    if _DROPOUT in parts or sspec.kind == _FLASH:
+        # flash_crowd reuses the dropout parameter slots: p_drop is the
+        # per-round decay probability, p_return the per-round BURST
+        # probability (see ``flash_crowd_transition``)
         p_drop = np.full((n,), sspec.p_drop, f32)
         p_return = np.full((n,), sspec.p_return, f32)
     else:
@@ -218,10 +222,38 @@ def advance_dynamic(cfg, key, s: ScenarioState) -> ScenarioState:
                       avail=avail.astype(jnp.float32))
 
 
+def flash_crowd_transition(cfg, key, s: ScenarioState) -> ScenarioState:
+    """Burst arrivals: availability flips in WAVES instead of mixing.
+
+    Between bursts the population only decays — each available client
+    drops with its ``p_drop`` and dropped clients stay down, so
+    availability drains toward zero.  With probability ``mean(p_return)``
+    per round a flash crowd arrives and EVERY dropped client returns at
+    once (the clients that just dropped this round stay down, so a burst
+    round still churns).  The result is the sawtooth arrival pattern the
+    semi-async buffered engine (DESIGN.md §11) is built to absorb: long
+    quiet stretches followed by a wall of simultaneous admissions —
+    exactly where a fill-or-timeout trigger beats a per-round barrier.
+
+    Parameter reuse keeps this a pure data-parameterised transition:
+    ``p_drop`` is the decay chain, ``p_return`` the burst probability
+    (``init_scenario`` fills both for kind="flash_crowd").
+    """
+    del cfg
+    k_burst, k_drop = jax.random.split(key)
+    burst = jax.random.uniform(k_burst, ()) < jnp.mean(s.p_return)
+    u = jax.random.uniform(k_drop, s.avail.shape)
+    up = s.avail > 0
+    stay_up = up & (u >= s.p_drop)
+    avail = jnp.where(burst, stay_up | ~up, stay_up)
+    return s._replace(avail=avail.astype(jnp.float32))
+
+
 Transition = Callable[..., ScenarioState]
 
 TRANSITIONS: Dict[str, Transition] = {"static": static_transition,
-                                      "dynamic": advance_dynamic}
+                                      "dynamic": advance_dynamic,
+                                      _FLASH: flash_crowd_transition}
 # the named parts (and every "+"-mixture of them, any order) run the same
 # data-parameterised program; registering them lets
 # EngineSpec(scenario="random_waypoint") work directly, at the price of one
@@ -260,6 +292,10 @@ PRESETS: Dict[str, ScenarioSpec] = {
                                  speed_max_mps=3.0, p_drop=0.3, p_return=0.3),
     # everything at once — vehicular speeds on a heterogeneous fleet
     "full_dynamic": ScenarioSpec(kind="dynamic", speed_max_mps=25.0),
+    # burst arrivals: availability decays (p_drop), then a flash crowd
+    # returns every dropped client at once with prob p_return per round
+    "flash_crowd": ScenarioSpec(kind="flash_crowd", p_drop=0.25,
+                                p_return=0.15),
 }
 
 

@@ -50,12 +50,16 @@ class SweepCell:
     scheduler: str
     noma_enabled: bool
     seed: int
+    engine_mode: str = "sync"      # sync | buffered (DESIGN.md §11)
 
     @property
     def cell_id(self) -> str:
         noma = "noma" if self.noma_enabled else "oma"
+        # the sync id keeps the historical shape so existing result files
+        # and tooling line up; buffered cells get an explicit suffix
+        mode = "" if self.engine_mode == "sync" else f"__{self.engine_mode}"
         return (f"{self.scenario}__{self.policy}__{self.allocator}"
-                f"__{self.scheduler}__{noma}__s{self.seed}")
+                f"__{self.scheduler}__{noma}__s{self.seed}{mode}")
 
 
 @dataclasses.dataclass
@@ -86,6 +90,14 @@ class SweepGrid:
     # in-scan telemetry (DESIGN.md §10): every cell also persists its
     # per-round RoundTrace as ``<cell_id>.trace.json`` beside the metrics
     telemetry: bool = False
+    # engine-mode axis (DESIGN.md §11): "sync" is the paper's barrier
+    # round; "buffered" runs the same n_rounds as semi-async MICRO-steps.
+    # The buffer_* fields parameterise every buffered cell's trigger.
+    engine_modes: Sequence[str] = ("sync",)
+    buffer_fill: int = 0           # 0 = auto ((quota · M) // 2)
+    timeout_s: float = 10.0
+    n_tiers: int = 4
+    retier_every: int = 8
     # per-group DDPG training budget (used when the grid has
     # allocator="ddpg" cells and no pre-trained actor is supplied)
     ddpg_episodes: int = 12
@@ -105,11 +117,11 @@ def _resolve_scenario(entry: Any) -> Tuple[str, scenarios.ScenarioSpec]:
 
 
 def expand_grid(grid: SweepGrid) -> List[SweepCell]:
-    cells = [SweepCell(label, sspec, po, al, sch, nm, sd)
+    cells = [SweepCell(label, sspec, po, al, sch, nm, sd, em)
              for label, sspec in map(_resolve_scenario, grid.scenarios)
              for po in grid.policies for al in grid.allocators
              for sch in grid.schedulers for nm in grid.noma
-             for sd in grid.seeds]
+             for sd in grid.seeds for em in grid.engine_modes]
     ids = [c.cell_id for c in cells]
     if len(set(ids)) != len(ids):
         dupes = sorted({i for i in ids if ids.count(i) > 1})
@@ -119,26 +131,26 @@ def expand_grid(grid: SweepGrid) -> List[SweepCell]:
     return cells
 
 
-def _spec_for(cell: SweepCell, candidates_k: "int | None" = None,
-              sic_impl: str = "auto",
-              telemetry: bool = False) -> engine.EngineSpec:
+def _spec_for(cell: SweepCell, grid: SweepGrid) -> engine.EngineSpec:
     return engine.EngineSpec(policy=cell.policy, allocator=cell.allocator,
                              scheduler=cell.scheduler,
                              noma_enabled=cell.noma_enabled,
                              scenario=cell.sspec.engine_kind(),
-                             candidates_k=candidates_k, sic_impl=sic_impl,
-                             telemetry=telemetry)
+                             candidates_k=grid.candidates_k,
+                             sic_impl=grid.sic_impl,
+                             telemetry=grid.telemetry,
+                             engine_mode=cell.engine_mode,
+                             buffer_fill=grid.buffer_fill,
+                             timeout_s=grid.timeout_s,
+                             n_tiers=grid.n_tiers,
+                             retier_every=grid.retier_every)
 
 
-def _group_cells(cells: Sequence[SweepCell],
-                 candidates_k: "int | None" = None,
-                 sic_impl: str = "auto", telemetry: bool = False
+def _group_cells(cells: Sequence[SweepCell], grid: SweepGrid
                  ) -> Dict[engine.EngineSpec, List[SweepCell]]:
     groups: Dict[engine.EngineSpec, List[SweepCell]] = {}
     for cell in cells:
-        groups.setdefault(
-            _spec_for(cell, candidates_k, sic_impl, telemetry),
-            []).append(cell)
+        groups.setdefault(_spec_for(cell, grid), []).append(cell)
     return groups
 
 
@@ -173,8 +185,7 @@ def run_sweep(cfg, grid: SweepGrid, *, out_dir: str = "results",
                 "ddpg cells mix static (2N,) and dynamic (3N,) observation "
                 "shapes — one actor cannot serve both; split the grid or "
                 "drop actor_params to train per group")
-    groups = _group_cells(cells, grid.candidates_k, grid.sic_impl,
-                          grid.telemetry)
+    groups = _group_cells(cells, grid)
     sweep_dir = os.path.join(out_dir, f"sweep_{grid.name}")
     if write_json:
         os.makedirs(sweep_dir, exist_ok=True)
@@ -279,7 +290,8 @@ def run_sweep(cfg, grid: SweepGrid, *, out_dir: str = "results",
                  "allocators": list(grid.allocators),
                  "schedulers": list(grid.schedulers),
                  "noma": list(grid.noma),
-                 "seeds": list(grid.seeds)},
+                 "seeds": list(grid.seeds),
+                 "engine_modes": list(grid.engine_modes)},
         "groups": timings,
         "final": summarize(per_cell),
     }
@@ -319,6 +331,9 @@ def main(argv=None) -> None:
     ap.add_argument("--telemetry", action="store_true",
                     help="persist per-round RoundTrace JSON beside each "
                          "cell's metrics")
+    ap.add_argument("--buffered", action="store_true",
+                    help="add the semi-async buffered engine as a second "
+                         "engine-mode axis value (DESIGN.md §11)")
     args = ap.parse_args(argv)
 
     cfg = dc.replace(CONFIG, n_clients=32, n_edges=4, min_samples=60,
@@ -326,12 +341,13 @@ def main(argv=None) -> None:
     grid = SweepGrid(
         name="demo",
         scenarios=("static", "random_waypoint", "markov_dropout",
-                   "hetero_devices", "full_dynamic"),
+                   "hetero_devices", "full_dynamic", "flash_crowd"),
         policies=("fcea", "gcea"),
         seeds=(0,) if args.quick else (0, 1),
         n_rounds=3 if args.quick else 10,
         candidates_k=args.candidates,
-        telemetry=args.telemetry)
+        telemetry=args.telemetry,
+        engine_modes=("sync", "buffered") if args.buffered else ("sync",))
     summary = run_sweep(cfg, grid, out_dir=args.out,
                         mesh=engine.fleet_mesh() if args.sharded else None)
     print(json.dumps({k: summary[k] for k in

@@ -177,6 +177,9 @@ def stream_scanned(cfg, spec, state, bundle, n_rounds: int, sink,
     (final_state, metrics, trace) exactly like ``collect_scanned`` —
     the stream is a tee, not a different result."""
     _require_telemetry(spec)
+    # fix the scan-carry structure up front: buffered specs enter with the
+    # aggregation buffer attached, sync specs with it absent (engine.py §11)
+    state = engine.ensure_buffer(cfg, spec, state)
     run = _scan_streaming(cfg, spec, n_rounds, sink, ordered)
     final, (ms, trace) = run(state, bundle, actor_params)
     jax.block_until_ready(ms)
@@ -190,6 +193,9 @@ def stream_scanned_client_sharded(cfg, spec, state, bundle, n_rounds: int,
     ``engine.run_scanned_client_sharded``."""
     _require_telemetry(spec)
     mesh = engine.client_mesh() if mesh is None else mesh
+    # attach the buffer BEFORE padding so its per-client leaves pad and
+    # shard with the rest of the state
+    state = engine.ensure_buffer(cfg, spec, state)
     cfg, state, bundle = engine.pad_clients(cfg, state, bundle,
                                             int(mesh.devices.size))
     state, bundle = engine.shard_clients(state, bundle, mesh)
@@ -215,6 +221,7 @@ def stream_fleet(cfg, spec, states, bundles, n_rounds: int, sink,
     @jax.jit
     def run(states, bundles):
         def one(state, bundle):
+            state = engine.ensure_buffer(cfg, spec, state)
             (final, _), out = jax.lax.scan(step, (state, bundle), None,
                                            length=n_rounds)
             return final, out

@@ -62,6 +62,14 @@ class RoundTrace(NamedTuple):
       decode chain an edge runs this round (Eq. 7)
     * ``stale_hist``      — (len(STALE_BIN_EDGES),) histogram of post-
       update A_n (Eq. 20)
+
+    Buffered engine (DESIGN.md §11; all-zero on the sync engine):
+
+    * ``buffer_fill``     — updates in the FedBuff buffer at trigger
+      evaluation (BEFORE any reset this micro-step)
+    * ``trigger_cause``   — 0 = no merge, 1 = fill trigger, 2 = timeout
+    * ``tier_active``     — the TiFL tier admitted this micro-step
+    * ``tier_occupancy``  — idle-and-available clients of that tier
     """
     round: jnp.ndarray               # () int32
     time_local_s: jnp.ndarray        # () f32
@@ -79,6 +87,10 @@ class RoundTrace(NamedTuple):
     z_relaxed: jnp.ndarray           # (M,) f32
     sic_depth: jnp.ndarray           # () int32
     stale_hist: jnp.ndarray          # (8,) int32
+    buffer_fill: jnp.ndarray         # () int32
+    trigger_cause: jnp.ndarray       # () int32
+    tier_active: jnp.ndarray         # () int32
+    tier_occupancy: jnp.ndarray      # () int32
 
 
 def staleness_histogram(staleness: jnp.ndarray) -> jnp.ndarray:
@@ -95,17 +107,25 @@ def round_trace(cfg, spec, *, round_idx: jnp.ndarray, rc_all: cost.RoundCost,
                 staleness: jnp.ndarray,
                 capacitance: Optional[jnp.ndarray],
                 sweeps: jnp.ndarray,
-                sched: Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray],
+                sched: Optional[Tuple[jnp.ndarray, jnp.ndarray,
+                                      jnp.ndarray]],
                 cand: Optional[CandidateSet],
                 assigned: Optional[jnp.ndarray],
                 dist: jnp.ndarray, avail: Optional[jnp.ndarray],
-                coverage_radius_m: float) -> RoundTrace:
+                coverage_radius_m: float,
+                buffer: Optional[Tuple[jnp.ndarray, jnp.ndarray,
+                                       jnp.ndarray, jnp.ndarray]] = None
+                ) -> RoundTrace:
     """Build one round's trace from tensors the round already computed.
 
     ``rc_all`` is the z = 1 cost surface (its per-client terms don't
     depend on z); ``sched`` is ``engine._schedule_traced``'s
-    (iterations, residual, z_relaxed) triple; ``staleness`` is the
-    POST-update A_n so the histogram matches ``avg_staleness``.
+    (iterations, residual, z_relaxed) triple (``None`` on the buffered
+    engine, which has no edge scheduler — the PDD leaves read 0);
+    ``staleness`` is the POST-update A_n so the histogram matches
+    ``avg_staleness``; ``buffer`` is the buffered engine's
+    (fill, trigger_cause, tier_active, tier_occupancy) quadruple
+    (``None`` on sync — those leaves read 0).
     """
     f32 = jnp.float32
     associated = jnp.sum(assoc, axis=1) > 0
@@ -139,7 +159,15 @@ def round_trace(cfg, spec, *, round_idx: jnp.ndarray, rc_all: cost.RoundCost,
         valid_frac = jnp.mean(cov.astype(f32))
         frontier_sat = jnp.asarray(0.0, f32)
 
+    if sched is None:
+        i32 = jnp.int32
+        sched = (jnp.zeros((), i32), jnp.zeros((), f32),
+                 jnp.zeros(z.shape, f32))
     iters, residual, z_relaxed = sched
+    if buffer is None:
+        zi = jnp.zeros((), jnp.int32)
+        buffer = (zi, zi, zi, zi)
+    b_fill, b_cause, b_tier, b_occ = buffer
     return RoundTrace(
         round=round_idx.astype(jnp.int32),
         time_local_s=(tau2 * jnp.max(bm * t_cmp)).astype(f32),
@@ -156,4 +184,8 @@ def round_trace(cfg, spec, *, round_idx: jnp.ndarray, rc_all: cost.RoundCost,
         pdd_residual=residual.astype(f32),
         z_relaxed=z_relaxed.astype(f32),
         sic_depth=jnp.max(edge_load).astype(jnp.int32),
-        stale_hist=staleness_histogram(staleness))
+        stale_hist=staleness_histogram(staleness),
+        buffer_fill=b_fill.astype(jnp.int32),
+        trigger_cause=b_cause.astype(jnp.int32),
+        tier_active=b_tier.astype(jnp.int32),
+        tier_occupancy=b_occ.astype(jnp.int32))

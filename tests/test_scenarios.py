@@ -418,3 +418,37 @@ def test_env_bills_scenario_cost_surface():
     s1, _ = e_scen.reset(key)
     _, _, r_scen, _ = e_scen.step(s1, jnp.full((2 * n,), 0.5))
     assert float(r_plain) != float(r_scen)
+
+
+def test_flash_crowd_returns_in_waves():
+    """flash_crowd (DESIGN.md §11): between bursts the up-set only decays
+    (no lone returns); on a burst EVERY previously-dropped client comes
+    back at once — the all-or-nothing wave property."""
+    big = dataclasses.replace(SMALL, n_clients=256)
+    sspec = scenarios.ScenarioSpec(kind="flash_crowd", p_drop=0.3,
+                                   p_return=0.2)
+    rng = np.random.default_rng(3)
+    topo = engine.make_topology(rng, n_clients=big.n_clients,
+                                n_edges=big.n_edges,
+                                area_side_m=big.area_side_m)
+    s = scenarios.init_scenario(big, sspec, rng, topo)
+    step = jax.jit(scenarios.advance, static_argnums=(0, 1))
+    key = jax.random.key(3)
+    bursts = quiets = 0
+    for _ in range(60):
+        before = np.asarray(s.avail) > 0
+        key, k = jax.random.split(key)
+        s = step(big, "flash_crowd", k, s)
+        after = np.asarray(s.avail)
+        assert set(np.unique(after)) <= {0.0, 1.0}
+        returned = (~before) & (after > 0)
+        n_down = int((~before).sum())
+        if n_down and returned.sum() == n_down:
+            bursts += 1
+        else:
+            assert returned.sum() == 0          # no lone returns
+            quiets += 1
+    assert bursts >= 1 and quiets >= 1          # the sawtooth really runs
+    # the preset registers through the normal registry machinery
+    assert "flash_crowd" in scenarios.TRANSITIONS
+    assert scenarios.preset("flash_crowd").is_dynamic

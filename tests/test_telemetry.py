@@ -34,7 +34,8 @@ GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
 ROUNDS = 4
 
 INT_LEAVES = {"round", "assoc_sweeps", "edge_load", "pdd_iters",
-              "sic_depth", "stale_hist"}
+              "sic_depth", "stale_hist", "buffer_fill", "trigger_cause",
+              "tier_active", "tier_occupancy"}
 
 
 def _leaf_shapes(m):
