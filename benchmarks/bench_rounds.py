@@ -54,6 +54,7 @@ from repro.configs.hfl_mnist import CONFIG
 from repro.core import (aggregation, association, cost, engine, fuzzy, noma,
                         pdd)
 from repro.core.hfl import HFLSimulation
+from repro.faults import FaultSpec
 from repro.models.mlp import MLPClassifier
 
 OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_rounds.json")
@@ -72,6 +73,13 @@ SPEC_SERIAL = dataclasses.replace(SPEC, resolver="serial",
                                   sic_impl="pairwise")
 # the semi-async buffered engine (DESIGN.md §11): same spec, micro-steps
 SPEC_BUFFERED = dataclasses.replace(SPEC, engine_mode="buffered")
+# the fault layer on the buffered engine (DESIGN.md §12): edge churn +
+# SINR-tied uplink loss + retry/backoff + quarantine, all in-scan; its
+# delta vs buffered_rps prices the chaos epilogue
+SPEC_FAULTS = dataclasses.replace(
+    SPEC_BUFFERED,
+    faults=FaultSpec(edge_p_kill=0.1, edge_p_respawn=0.5,
+                     uplink_p_loss=0.1, uplink_loss_slope=0.2))
 # async A/B scenarios: churny worlds where the sync barrier pays its
 # straggler tail every round (the buffered engine's home turf)
 AB_SCENARIOS = ("flash_crowd", "markov_dropout")
@@ -269,6 +277,11 @@ def bench_size(n: int, m: int, *, eager_rounds: int, scan_rounds: int,
     #    round-for-round comparison; the virtual A/B lives in async_ab)
     out["buffered_rps"] = round(median_rps(
         lambda: engine.run_scanned(cfg, SPEC_BUFFERED, state, bundle,
+                                   scan_rounds), scan_rounds), 3)
+
+    # -- faulted: the chaos layer riding the buffered micro-step driver ------
+    out["faults_rps"] = round(median_rps(
+        lambda: engine.run_scanned(cfg, SPEC_FAULTS, state, bundle,
                                    scan_rounds), scan_rounds), 3)
 
     # -- telemetry-enabled scanned driver: the in-scan RoundTrace rides the

@@ -32,6 +32,15 @@ def _flatten(tree: Params) -> Dict[str, Tuple[np.ndarray, str]]:
     for path, leaf in flat:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
                        for p in path)
+        if (isinstance(leaf, jax.Array)
+                and jax.dtypes.issubdtype(leaf.dtype, jax.dtypes.prng_key)):
+            # a typed PRNG key (e.g. the scan carry's round key) travels
+            # as its raw key-data words; the dtype name records the
+            # impl so load re-wraps it bit-exactly
+            impl = str(jax.random.key_impl(leaf))
+            out[key] = (np.asarray(jax.random.key_data(leaf)),
+                        f"prng:{impl}")
+            continue
         arr = np.asarray(leaf)
         orig = arr.dtype.name
         if orig in _BITCAST:               # npz cannot hold ml_dtypes
@@ -40,7 +49,11 @@ def _flatten(tree: Params) -> Dict[str, Tuple[np.ndarray, str]]:
     return out
 
 
-def _restore_dtype(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+def _restore_dtype(arr: np.ndarray, dtype_name: str):
+    if dtype_name.startswith("prng:"):
+        import jax.numpy as jnp
+        return jax.random.wrap_key_data(jnp.asarray(arr),
+                                        impl=dtype_name[len("prng:"):])
     if dtype_name in _BITCAST:
         import ml_dtypes
         return arr.view(getattr(ml_dtypes, dtype_name))
@@ -90,9 +103,10 @@ def load_checkpoint(directory: str, template: Params,
         if key not in data:
             raise KeyError(f"checkpoint missing leaf {key!r}")
         want = manifest["keys"][key]
-        arr = _restore_dtype(data[key], want["dtype"])
-        assert list(arr.shape) == want["shape"], key
-        leaves.append(arr)
+        # shape-check the RAW stored array: a typed PRNG key re-wraps to
+        # the key shape (its trailing key-data axis folds into the dtype)
+        assert list(data[key].shape) == want["shape"], key
+        leaves.append(_restore_dtype(data[key], want["dtype"]))
     tree = jax.tree_util.tree_unflatten(treedef, leaves)
     return tree, int(manifest["step"]), manifest.get("extra", {})
 

@@ -89,6 +89,33 @@ def replicate(params: Params, n: int) -> Params:
 # the buffer rides the scan carry like any other pytree.
 # ---------------------------------------------------------------------------
 
+def faulted_cloud_aggregate(global_params: Params, client_deltas: Params,
+                            assoc_eff: jnp.ndarray, n_samples: jnp.ndarray,
+                            z: jnp.ndarray) -> Params:
+    """The sync round's cloud epilogue under faults, in DELTA space.
+
+    With crashes/losses/quarantine the surviving cohort can shrink to
+    anything — including nothing — so the hierarchy aggregates client
+    DELTAS (trained − global) instead of raw params: a client that
+    contributes nothing moves nothing, and an edge (or round) with zero
+    surviving data leaves the global model bit-unchanged.
+
+    client_deltas: leaves (N, ...) — already quarantined (guard-cleaned);
+    assoc_eff (N, M) — association masked to surviving clients;
+    n_samples (N,); z (M,) scheduler selection.
+    """
+    edge_delta = edge_aggregate(client_deltas, assoc_eff, n_samples)
+    edge_data = jnp.sum(assoc_eff * n_samples[:, None], axis=0)   # (M,)
+    z_eff = z * (edge_data > 0).astype(z.dtype)
+    agg = cloud_aggregate(edge_delta, z_eff, edge_data)
+    has_data = jnp.sum(z_eff * edge_data) > 0
+
+    def upd(g, d):
+        return jnp.where(has_data, g + d.astype(g.dtype), g)
+
+    return jax.tree.map(upd, global_params, agg)
+
+
 def buffer_zeros(params: Params) -> Params:
     """A zeroed delta accumulator shaped like the global model."""
     return jax.tree.map(jnp.zeros_like, params)

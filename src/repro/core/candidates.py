@@ -44,14 +44,18 @@ class CandidateSet(NamedTuple):
 
 def build_candidates(dist: jnp.ndarray, k: int, *,
                      coverage_radius_m: float,
-                     avail: Optional[jnp.ndarray] = None) -> CandidateSet:
+                     avail: Optional[jnp.ndarray] = None,
+                     edge_up: Optional[jnp.ndarray] = None) -> CandidateSet:
     """Top-``k`` nearest edges per client from the (N, M) distance field.
 
     ``lax.top_k`` of the negated distances returns ascending distance with
     exact ties preferring the LOWER edge index — precisely the strict
     client preference order the resolvers need.  ``avail`` (N,) masks a
     dropped client's whole row invalid (the §6 contract: it is out of
-    every edge's coverage this round).
+    every edge's coverage this round).  ``edge_up`` (M,) marks dead edges
+    (fault-layer churn) invalid in every row while keeping ``dist``
+    physical — dead edges still rank by true distance, they just cannot
+    be selected, so the frontier re-forms around the survivors.
     """
     n, m = dist.shape
     k = min(int(k), m)
@@ -60,6 +64,8 @@ def build_candidates(dist: jnp.ndarray, k: int, *,
     valid = dk <= coverage_radius_m
     if avail is not None:
         valid = valid & (avail > 0)[:, None]
+    if edge_up is not None:
+        valid = valid & (jnp.take(edge_up, idx) > 0)
     return CandidateSet(idx=idx.astype(jnp.int32), valid=valid, dist=dk)
 
 

@@ -41,6 +41,9 @@ from repro.core.candidates import CandidateSet
 from repro import telemetry
 from repro.telemetry.spans import stage as _stage
 from repro.data import federated
+from repro.faults import guard as fault_guard
+from repro.faults import inject as fault_inject
+from repro.faults.spec import FaultSpec, FaultState, init_faults
 from repro.models.mlp import MLPClassifier
 from repro import scenarios
 from repro.scenarios import ScenarioSpec, ScenarioState
@@ -108,6 +111,14 @@ class EngineSpec:
     n_tiers: int = 4                # TiFL speed tiers (1 = no tiering)
     retier_every: int = 8           # micro-steps between quantile retiers
     buffer_lr: float = 1.0          # server step on the merged mean delta
+    # fault injection & graceful degradation (DESIGN.md §12).  ``None``
+    # (the default) keeps every fault path STRUCTURALLY absent — no
+    # FaultState rides the carry, no fault op is traced, and every golden
+    # trajectory stays bit-exact un-re-recorded (the telemetry/engine_mode
+    # discipline).  Set a ``FaultSpec`` to turn on edge churn, SINR-tied
+    # uplink loss with retry/backoff (buffered mode), mid-round crashes,
+    # delta poisoning, and the update-quarantine guard.
+    faults: Optional[FaultSpec] = None
 
 
 class RoundBundle(NamedTuple):
@@ -151,6 +162,7 @@ class RoundState(NamedTuple):
     round_idx: jnp.ndarray   # () int32
     scenario: ScenarioState  # per-round world state (DESIGN.md §6)
     buffer: Any = None       # BufferState | None (DESIGN.md §11)
+    faults: Any = None       # FaultState | None (DESIGN.md §12)
 
 
 class RoundMetrics(NamedTuple):
@@ -252,6 +264,29 @@ def ensure_buffer(cfg, spec: EngineSpec, state: "RoundState") -> "RoundState":
     if state.buffer is not None:
         return state._replace(buffer=None)
     return state
+
+
+def ensure_faults(cfg, spec: EngineSpec, state: "RoundState") -> "RoundState":
+    """Normalise ``state.faults`` to the spec: attach a fresh
+    ``FaultState`` when ``spec.faults`` is set (keeping one already there,
+    e.g. mid-scan or restored from a checkpoint), strip it when faults are
+    off so the no-fault carry — and with it every golden program — stays
+    structurally identical to the pre-fault engine.  Like
+    ``ensure_buffer``, the check is on pytree STRUCTURE (None or not), so
+    it is trace-time static and jit-safe."""
+    if spec.faults is not None:
+        if state.faults is None:
+            return state._replace(faults=init_faults(cfg))
+        return state
+    if state.faults is not None:
+        return state._replace(faults=None)
+    return state
+
+
+def ensure_carry(cfg, spec: EngineSpec, state: "RoundState") -> "RoundState":
+    """Normalise the FULL scan carry to the spec's optional subsystems
+    (aggregation buffer + fault state) — the one entry point drivers use."""
+    return ensure_faults(cfg, spec, ensure_buffer(cfg, spec, state))
 
 
 # ---------------------------------------------------------------------------
@@ -383,14 +418,17 @@ def _associate(cfg, spec: EngineSpec, key, gains, dist, counts, stale,
 
 
 def _build_candidates(cfg, spec: EngineSpec, dist,
-                      avail: Optional[jnp.ndarray]
+                      avail: Optional[jnp.ndarray],
+                      edge_up: Optional[jnp.ndarray] = None
                       ) -> Optional[CandidateSet]:
-    """The per-round (N, K) frontier, or None on the dense path."""
+    """The per-round (N, K) frontier, or None on the dense path.
+    ``edge_up`` (fault-layer churn) invalidates dead edges while keeping
+    the frontier's distances physical."""
     if spec.candidates_k is None:
         return None
     return candidates.build_candidates(
         dist, spec.candidates_k, coverage_radius_m=coverage_radius(cfg),
-        avail=avail)
+        avail=avail, edge_up=edge_up)
 
 
 def _grid_allocate(cfg, spec: EngineSpec, assoc, gains, counts, dist,
@@ -464,7 +502,14 @@ def associate_snapshot(cfg, spec: EngineSpec, state: RoundState,
     scen = state.scenario
     dist = scen.dist if dynamic else bundle.dist
     avail = scen.avail if dynamic else None
-    cand = _build_candidates(cfg, spec, dist, avail)
+    edge_up = (state.faults.edge_up
+               if spec.faults is not None and state.faults is not None
+               else None)
+    cand = _build_candidates(cfg, spec, dist, avail, edge_up)
+    if edge_up is not None and cand is None:
+        # dense path: route around the CURRENT dead edges the same way the
+        # round does (masked distance field)
+        dist = fault_inject.masked_dist(dist, edge_up)
     out = _associate(cfg, spec, round_keys(spec, state.key)[3],
                      state.gains, dist, bundle.counts, state.staleness,
                      avail, cand)
@@ -593,6 +638,44 @@ def _train(cfg, spec: EngineSpec, model: MLPClassifier, key,
     return global_params, client_params
 
 
+def _train_faulty(cfg, spec: EngineSpec, model: MLPClassifier, key,
+                  state: RoundState, bundle: RoundBundle, assoc, z, gains,
+                  edge_up, k_crash, k_loss, k_poison
+                  ) -> Tuple[Params, Params, Tuple[jnp.ndarray, ...]]:
+    """The sync training stage under faults (DESIGN.md §12.2).
+
+    Training is unchanged (``_train_cohort``), but the cloud epilogue
+    moves to DELTA space: each selected client's update is its trained
+    model minus the global it pulled.  The transmitted copy then runs the
+    fault gauntlet — mid-round crash (compute billed, delta lost),
+    SINR-tied uplink loss (sync has no buffer to retry from: a lost
+    upload is simply dropped this round), optional poisoning, and the
+    quarantine guard — and only the surviving, guard-cleaned deltas reach
+    ``faulted_cloud_aggregate``.  Client LOCAL params are never poisoned:
+    poisoning models a corrupted transmission, not corrupted training.
+
+    Returns ``(global', client_params, (ok, crashed, lost, n_rej))`` —
+    ``ok`` is the surviving-client mask the staleness update consumes.
+    """
+    fsp = spec.faults
+    client_params, _ = _train_cohort(cfg, spec, model, key, state, bundle,
+                                     assoc)
+    selected = jnp.sum(assoc, axis=1) > 0
+    crashed = fault_inject.draw_crashes(fsp, k_crash, selected)
+    lost = fault_inject.draw_losses(fsp, k_loss, gains, edge_up,
+                                    selected & ~crashed)
+    delivered = selected & ~crashed & ~lost
+    deltas = jax.tree.map(lambda c, g: c - g[None], client_params,
+                          state.global_params)
+    deltas, _ = fault_inject.poison_deltas(fsp, k_poison, deltas, delivered)
+    clean, ok, n_rej = fault_guard.quarantine(deltas, delivered,
+                                              fsp.quarantine_clip)
+    assoc_eff = assoc * ok.astype(assoc.dtype)[:, None]
+    global_params = aggregation.faulted_cloud_aggregate(
+        state.global_params, clean, assoc_eff, bundle.counts, z)
+    return global_params, client_params, (ok, crashed, lost, n_rej)
+
+
 # ---------------------------------------------------------------------------
 # The round step + compiled drivers
 # ---------------------------------------------------------------------------
@@ -660,6 +743,22 @@ def _buffered_step(cfg, spec: EngineSpec, state: RoundState,
                               path_loss_exponent=cfg.path_loss_exponent,
                               rho=spec.fading_rho)
 
+    # 0b. fault layer (DESIGN.md §12): the fault stream folds off the fade
+    #     key (the no-fault PRNG layout is untouched); edge churn advances
+    #     the live-edge mask, and the ASSOCIATION view of the distance
+    #     field pushes dead edges out of coverage so the unchanged
+    #     pipeline routes the orphaned clients to the survivors.
+    fsp = spec.faults
+    if fsp is not None:
+        k_edge, k_loss, k_crash, k_poison = jax.random.split(
+            fault_inject.fault_key(k_fade), 4)
+        edge_up = fault_inject.advance_edges(fsp, k_edge,
+                                             state.faults.edge_up)
+        dist_assoc = fault_inject.masked_dist(dist, edge_up)
+    else:
+        edge_up = None
+        dist_assoc = dist
+
     # 1. TiFL cohort gate: only idle clients of the scheduled tier enter
     #    the association market this micro-step, so every cohort is
     #    speed-coherent and the buffer drains in waves instead of one
@@ -668,7 +767,7 @@ def _buffered_step(cfg, spec: EngineSpec, state: RoundState,
     eligible = ((~buf.in_flight) & (buf.tier == cur_tier)).astype(f32) \
         * avail
     with _stage("associate"):
-        cand = _build_candidates(cfg, spec, dist, eligible)
+        cand = _build_candidates(cfg, spec, dist, eligible, edge_up)
         sweeps = None
         if cand is not None:
             out = _associate(cfg, spec, k_assoc, gains, dist,
@@ -681,7 +780,7 @@ def _buffered_step(cfg, spec: EngineSpec, state: RoundState,
                 assigned, cfg.n_edges).astype(f32)
         else:
             assigned = None
-            assoc = _associate(cfg, spec, k_assoc, gains, dist,
+            assoc = _associate(cfg, spec, k_assoc, gains, dist_assoc,
                                bundle.counts, state.staleness, eligible,
                                with_sweeps=spec.telemetry)
             if spec.telemetry:
@@ -708,6 +807,14 @@ def _buffered_step(cfg, spec: EngineSpec, state: RoundState,
                                  sic_max_per_edge=quota_for(cfg, spec),
                                  assigned=assigned)
     admitted = jnp.sum(assoc, axis=1) > 0                    # (N,) bool
+    if fsp is not None:
+        # mid-round crash: the cohort bill still charges the admitted
+        # client (the energy was spent) but its update never takes flight.
+        crashed = fault_inject.draw_crashes(fsp, k_crash, admitted)
+        flying = admitted & ~crashed
+    else:
+        crashed = None
+        flying = admitted
 
     # 3. train the cohort from the CURRENT global model and park its
     #    deltas in flight.  The admitted client's update is its trained
@@ -722,15 +829,22 @@ def _buffered_step(cfg, spec: EngineSpec, state: RoundState,
         return m.reshape((-1,) + (1,) * (leaf.ndim - 1))
 
     pending = jax.tree.map(
-        lambda pd, c, g: jnp.where(_mask(admitted, c), c - g[None], pd),
+        lambda pd, c, g: jnp.where(_mask(flying, c), c - g[None], pd),
         buf.pending_delta, client_params, state.global_params)
+    if fsp is not None:
+        # poisoning corrupts the TRANSMITTED copy (the in-flight delta),
+        # never the client's local params; a new attempt resets the
+        # upload's retry ledger.
+        pending, _ = fault_inject.poison_deltas(fsp, k_poison, pending,
+                                                flying)
+        attempts0 = jnp.where(flying, 0, state.faults.attempts)
     # modelled wall duration: τ₂ edge iterations + the edge→cloud hop
     dur = cfg.tau2 * rc_all.client_time_s \
         + cfg.edge_model_size_bits / cfg.edge_rate_bps
-    finish = jnp.where(admitted, buf.clock_s + dur, buf.finish_s)
-    in_flight = buf.in_flight | admitted
-    pulled = jnp.where(admitted, buf.version, buf.pulled_ver)
-    obs = jnp.where(admitted,
+    finish = jnp.where(flying, buf.clock_s + dur, buf.finish_s)
+    in_flight = buf.in_flight | flying
+    pulled = jnp.where(flying, buf.version, buf.pulled_ver)
+    obs = jnp.where(flying,
                     jnp.where(buf.obs_s > 0.0,
                               0.5 * buf.obs_s + 0.5 * dur, dur),
                     buf.obs_s)
@@ -748,28 +862,64 @@ def _buffered_step(cfg, spec: EngineSpec, state: RoundState,
     # 5. land every completed update with its staleness weight
     eps = jnp.asarray(1e-5, f32)
     landed = in_flight & (finish <= clock + eps)
+    if fsp is not None:
+        # 5b. uplink loss + retry/backoff (DESIGN.md §12.2): a completed
+        #     upload is lost with its SINR-tied probability; a lost upload
+        #     with attempts left re-enters flight at an exponentially
+        #     backed-off finish time, otherwise it is dropped and counted.
+        #     Delivered updates then pass the quarantine guard, and ONLY
+        #     the guard-cleaned tree reaches the accumulator (the raw
+        #     pending delta stays in the carry for any retry to re-send).
+        landed_raw = landed
+        lost = fault_inject.draw_losses(fsp, k_loss, gains, edge_up,
+                                        landed_raw)
+        can_retry = lost & (attempts0 < int(fsp.max_attempts))
+        dropped = lost & ~can_retry
+        delivered = landed_raw & ~lost
+        finish = jnp.where(can_retry,
+                           clock + fault_inject.backoff_s(fsp, attempts0),
+                           finish)
+        attempts = jnp.where(can_retry, attempts0 + 1, attempts0)
+        clean, okd, n_rej = fault_guard.quarantine(
+            pending, delivered, fsp.quarantine_clip)
+        landed = okd
+        land_tree = clean
+    else:
+        land_tree = pending
     age = staleness.buffer_age(buf.version, pulled)
     w = jnp.where(landed,
                   staleness.buffer_weight(age) * bundle.counts, 0.0)
     delta_sum, weight_sum = aggregation.buffer_accumulate(
-        buf.delta_sum, buf.weight_sum, pending, w)
+        buf.delta_sum, buf.weight_sum, land_tree, w)
     fill = buf.fill + jnp.sum(landed, dtype=i32)
-    in_flight = in_flight & ~landed
+    if fsp is not None:
+        in_flight = (in_flight & ~landed_raw) | can_retry
+    else:
+        in_flight = in_flight & ~landed
 
     # 6. fill-or-timeout trigger → staleness-weighted buffered merge.
     #    ``applied`` (merge actually changed the model) gates the version
     #    bump and the cloud-hop energy; ``fired`` alone resets the timer,
-    #    so an empty timeout does not freeze the clock.
+    #    so an empty timeout does not freeze the clock.  Under faults the
+    #    merge additionally waits for ``min_participation`` buffered
+    #    updates (a churn-starved buffer keeps accumulating across timeout
+    #    resets); at the default 1 the guard is value-identical to the
+    #    guard-less trigger (fill == 0 ⇒ the buffer is empty).
     fill_target = buffer_fill_for(cfg, spec)
     timed_out = clock >= deadline - eps
     fired = (fill >= fill_target) | timed_out
-    applied = fired & (weight_sum > 0.0)
+    if fsp is not None:
+        do_merge = fired & (fill >= max(1, int(fsp.min_participation)))
+    else:
+        do_merge = fired
+    applied = do_merge & (weight_sum > 0.0)
     global_params = aggregation.buffer_apply(
-        state.global_params, delta_sum, weight_sum, spec.buffer_lr, fired)
+        state.global_params, delta_sum, weight_sum, spec.buffer_lr,
+        do_merge)
     delta_sum = jax.tree.map(
-        lambda d: jnp.where(fired, jnp.zeros_like(d), d), delta_sum)
-    weight_sum = jnp.where(fired, 0.0, weight_sum)
-    fill_after = jnp.where(fired, 0, fill)
+        lambda d: jnp.where(do_merge, jnp.zeros_like(d), d), delta_sum)
+    weight_sum = jnp.where(do_merge, 0.0, weight_sum)
+    fill_after = jnp.where(do_merge, 0, fill)
     version = buf.version + applied.astype(i32)
     last_agg = jnp.where(fired, clock, buf.last_agg_s)
 
@@ -809,8 +959,25 @@ def _buffered_step(cfg, spec: EngineSpec, state: RoundState,
         pulled_ver=pulled, obs_s=obs, tier=tier, delta_sum=delta_sum,
         weight_sum=weight_sum, fill=fill_after, version=version,
         clock_s=clock, last_agg_s=last_agg, step=step1)
+    new_faults = None
+    fault_tr = None
+    if fsp is not None:
+        flt: FaultState = state.faults
+        n_retry = jnp.sum(can_retry, dtype=i32)
+        n_drop = jnp.sum(dropped, dtype=i32) + jnp.sum(crashed, dtype=i32)
+        n_crash = jnp.sum(crashed, dtype=i32)
+        new_faults = FaultState(
+            edge_up=edge_up, attempts=attempts,
+            n_retries=flt.n_retries + n_retry,
+            n_dropped=flt.n_dropped + n_drop,
+            n_quarantined=flt.n_quarantined + n_rej,
+            n_crashed=flt.n_crashed + n_crash)
+        fault_tr = (jnp.sum((edge_up <= 0).astype(i32)),
+                    fault_inject.orphan_count(dist, edge_up,
+                                              coverage_radius(cfg), avail),
+                    n_retry, n_drop, n_rej)
     new_state = RoundState(global_params, client_params, gains, new_stale,
-                           key, round_idx, scen, new_buf)
+                           key, round_idx, scen, new_buf, new_faults)
     if spec.telemetry:
         cause = jnp.where(fired,
                           jnp.where(fill >= fill_target, 1, 2),
@@ -824,7 +991,8 @@ def _buffered_step(cfg, spec: EngineSpec, state: RoundState,
             dist=dist, avail=avail if dynamic else None,
             coverage_radius_m=coverage_radius(cfg),
             buffer=(fill, cause, cur_tier,
-                    jnp.sum((eligible > 0).astype(i32))))
+                    jnp.sum((eligible > 0).astype(i32))),
+            faults=fault_tr)
         return new_state, (metrics, tr)
     return new_state, metrics
 
@@ -841,8 +1009,9 @@ def round_step(cfg, spec: EngineSpec, state: RoundState,
     With ``spec.engine_mode="buffered"`` the step is a semi-async
     MICRO-step (``_buffered_step``); "sync" (the default) is the paper's
     semi-synchronous barrier round, bit-for-bit the pre-buffer program
-    (``ensure_buffer`` keeps the buffer structurally absent)."""
-    state = ensure_buffer(cfg, spec, state)
+    (``ensure_carry`` keeps the buffer and fault state structurally
+    absent)."""
+    state = ensure_carry(cfg, spec, state)
     if spec.engine_mode == "buffered":
         return _buffered_step(cfg, spec, state, bundle, actor_params)
     model = MLPClassifier(cfg.input_dim, cfg.hidden, cfg.n_classes)
@@ -865,6 +1034,22 @@ def round_step(cfg, spec: EngineSpec, state: RoundState,
     gains = noma.evolve_gains(k_fade, state.gains, dist,
                               path_loss_exponent=cfg.path_loss_exponent,
                               rho=spec.fading_rho)
+    # 1b. fault layer (DESIGN.md §12): fold the fault stream off the fade
+    #     key (no split consumed from the round layout), advance the edge
+    #     churn, and push dead edges out of the ASSOCIATION view of the
+    #     distance field — the unchanged pipeline routes their orphaned
+    #     clients to the surviving frontier.  Gains, allocation and the
+    #     Eq. 23a bill keep the PHYSICAL distances.
+    fsp = spec.faults
+    if fsp is not None:
+        k_edge, k_loss, k_crash, k_poison = jax.random.split(
+            fault_inject.fault_key(k_fade), 4)
+        edge_up = fault_inject.advance_edges(fsp, k_edge,
+                                             state.faults.edge_up)
+        dist_assoc = fault_inject.masked_dist(dist, edge_up)
+    else:
+        edge_up = None
+        dist_assoc = dist
     # 2. fuzzy scoring + association (pure JAX — no host loop);
     #    unavailable clients are out of coverage this round.  With
     #    ``spec.candidates_k`` set, the (N, K) frontier is built once here
@@ -873,7 +1058,7 @@ def round_step(cfg, spec: EngineSpec, state: RoundState,
     #    aggregation stage's cheap masked reductions.
     sweeps = None
     with _stage("associate"):
-        cand = _build_candidates(cfg, spec, dist, avail)
+        cand = _build_candidates(cfg, spec, dist, avail, edge_up)
         if cand is not None:
             out = _associate(cfg, spec, k_assoc, gains, dist,
                              bundle.counts, state.staleness, avail, cand,
@@ -886,7 +1071,7 @@ def round_step(cfg, spec: EngineSpec, state: RoundState,
             # ``cand.valid`` already excludes dropped clients — no avail mask
         else:
             assigned = None
-            assoc = _associate(cfg, spec, k_assoc, gains, dist,
+            assoc = _associate(cfg, spec, k_assoc, gains, dist_assoc,
                                bundle.counts, state.staleness, avail,
                                with_sweeps=spec.telemetry)
             if spec.telemetry:
@@ -920,14 +1105,27 @@ def round_step(cfg, spec: EngineSpec, state: RoundState,
             z, sched = _schedule_traced(cfg, spec, rc_all)
         else:
             z = _schedule(cfg, spec, rc_all)
+        if fsp is not None:
+            # a dead edge cannot be scheduled: association already routed
+            # around it, this removes it from the Eq. 18/19 bill too
+            z = z * (edge_up > 0).astype(z.dtype)
         rc = cost.apply_schedule(cfg, rc_all, z)
     # 5. τ₂·τ₁ training + hierarchical aggregation
     with _stage("train"):
-        global_params, client_params = _train(cfg, spec, model, k_train,
-                                              state, bundle, assoc, z)
+        if fsp is not None:
+            global_params, client_params, fev = _train_faulty(
+                cfg, spec, model, k_train, state, bundle, assoc, z, gains,
+                edge_up, k_crash, k_loss, k_poison)
+            ok_clients, crashed, lost, n_rej = fev
+        else:
+            global_params, client_params = _train(cfg, spec, model,
+                                                  k_train, state, bundle,
+                                                  assoc, z)
     # 6. staleness (Eq. 20): reset only for clients whose edge was selected
+    #    (and, under faults, whose update actually survived to aggregation)
     selected = jnp.sum(assoc, axis=1) > 0
-    effective = selected & (z > 0)[jnp.argmax(assoc, axis=1)]
+    orchestrated = ok_clients if fsp is not None else selected
+    effective = orchestrated & (z > 0)[jnp.argmax(assoc, axis=1)]
     new_stale = staleness.update_staleness(state.staleness, effective)
 
     round_idx = state.round_idx + 1
@@ -948,8 +1146,25 @@ def round_step(cfg, spec: EngineSpec, state: RoundState,
         n_associated=jnp.sum(selected.astype(jnp.int32)),
         n_available=n_avail,
         z=z)
+    new_faults = None
+    fault_tr = None
+    if fsp is not None:
+        flt: FaultState = state.faults
+        i32 = jnp.int32
+        n_drop = (jnp.sum(lost, dtype=i32)
+                  + jnp.sum(crashed, dtype=i32))
+        new_faults = FaultState(
+            edge_up=edge_up, attempts=flt.attempts,
+            n_retries=flt.n_retries,      # sync has no buffer to retry from
+            n_dropped=flt.n_dropped + n_drop,
+            n_quarantined=flt.n_quarantined + n_rej,
+            n_crashed=flt.n_crashed + jnp.sum(crashed, dtype=i32))
+        fault_tr = (jnp.sum((edge_up <= 0).astype(i32)),
+                    fault_inject.orphan_count(dist, edge_up,
+                                              coverage_radius(cfg), avail),
+                    jnp.zeros((), i32), n_drop, n_rej)
     new_state = RoundState(global_params, client_params, gains, new_stale,
-                           key, round_idx, scen)
+                           key, round_idx, scen, None, new_faults)
     if spec.telemetry:
         tr = telemetry.round_trace(
             cfg, spec, round_idx=round_idx, rc_all=rc_all, z=z,
@@ -958,7 +1173,7 @@ def round_step(cfg, spec: EngineSpec, state: RoundState,
             capacitance=scen.kappa if dynamic else None,
             sweeps=sweeps, sched=sched, cand=cand, assigned=assigned,
             dist=dist, avail=avail,
-            coverage_radius_m=coverage_radius(cfg))
+            coverage_radius_m=coverage_radius(cfg), faults=fault_tr)
         return new_state, (metrics, tr)
     return new_state, metrics
 
@@ -969,9 +1184,10 @@ round_step_jit = jax.jit(round_step, static_argnums=(0, 1))
 def _scan_rounds(cfg, spec, state, bundle, n_rounds, actor_params):
     # normalise the carry BEFORE the scan so its pytree structure is
     # fixed: buffered runs enter with the aggregation buffer attached,
-    # sync runs with it structurally absent (a no-op on a plain sync
-    # state — golden programs are untouched).
-    state = ensure_buffer(cfg, spec, state)
+    # faulted runs with the fault state attached, everything else with
+    # both structurally absent (a no-op on a plain sync state — golden
+    # programs are untouched).
+    state = ensure_carry(cfg, spec, state)
 
     def step(s, _):
         return round_step(cfg, spec, s, bundle, actor_params)
@@ -1130,11 +1346,18 @@ def _client_shardings(state: RoundState, bundle: RoundBundle,
             delta_sum=jax.tree.map(lambda _: rep, buf.delta_sum),
             weight_sum=rep, fill=rep, version=rep, clock_s=rep,
             last_agg_s=rep, step=rep)
+    flt_sh = None
+    if state.faults is not None:
+        # the retry ledger is per-client; the (M,) edge mask and the
+        # scalar counters are replicated like the rest of the edge state
+        flt_sh = FaultState(edge_up=rep, attempts=cl, n_retries=rep,
+                            n_dropped=rep, n_quarantined=rep,
+                            n_crashed=rep)
     state_sh = RoundState(
         global_params=jax.tree.map(lambda _: rep, state.global_params),
         client_params=jax.tree.map(lambda _: cl, state.client_params),
         gains=cl, staleness=cl, key=rep, round_idx=rep, scenario=scen_sh,
-        buffer=buf_sh)
+        buffer=buf_sh, faults=flt_sh)
     bundle_sh = RoundBundle(dist=cl, x=cl, y=cl, counts=cl,
                             test_x=rep, test_y=rep)
     return state_sh, bundle_sh
@@ -1204,6 +1427,10 @@ def pad_clients(cfg, state: RoundState, bundle: RoundBundle, multiple: int):
             pulled_ver=const(buf.pulled_ver, 0),
             obs_s=const(buf.obs_s, 0.0),
             tier=const(buf.tier, 0)))
+    if state.faults is not None:
+        # inert clients never admit, so their retry ledger stays zero
+        state = state._replace(faults=state.faults._replace(
+            attempts=const(state.faults.attempts, 0)))
     bundle = bundle._replace(
         dist=const(bundle.dist, far), x=rep_last(bundle.x),
         y=rep_last(bundle.y), counts=const(bundle.counts, 0.0))

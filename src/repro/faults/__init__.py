@@ -1,0 +1,25 @@
+"""Fault injection & graceful degradation for the round engine
+(DESIGN.md §12).
+
+* ``spec``   — ``FaultSpec`` (static knobs, hangs off ``EngineSpec.faults``)
+  and the ``FaultState`` carry pytree;
+* ``inject`` — the pure per-round fault processes (edge churn, SINR-tied
+  uplink loss, crashes, delta poisoning, backoff schedule);
+* ``guard``  — the update quarantine (norm clip + NaN/Inf reject) run
+  before any delta reaches aggregation;
+* ``resume`` — the chunked checkpoint-resume driver
+  (``run_scanned_resumable``); imported lazily because it depends on
+  ``repro.core.engine``, which itself imports this package's leaf
+  modules — eager import here would be a cycle.
+"""
+from repro.faults.spec import FaultSpec, FaultState, init_faults  # noqa: F401
+
+__all__ = ["FaultSpec", "FaultState", "init_faults",
+           "run_scanned_resumable", "ResumableRun"]
+
+
+def __getattr__(name):
+    if name in ("run_scanned_resumable", "ResumableRun", "resume"):
+        from repro.faults import resume
+        return resume if name == "resume" else getattr(resume, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,68 @@
+"""Update quarantine: the last gate before aggregation (DESIGN.md §12.3).
+
+Contract: every client delta that reaches ``buffer_accumulate`` or the
+sync cloud epilogue first passes ``quarantine``.  Two defenses:
+
+* **norm clip** — a finite delta whose global L2 norm exceeds
+  ``quarantine_clip`` is rescaled onto the clip sphere (the update's
+  direction survives, its magnitude cannot dominate the merge);
+* **NaN/Inf reject** — a delta with ANY non-finite element is zeroed
+  outright and its client masked out of the merge.
+
+Zeroing (not just down-weighting) is load-bearing: the aggregators
+compute ``Σ wᵢ·dᵢ`` via einsum/broadcast products, and ``NaN · 0 = NaN``
+— a poisoned delta left in the buffer would contaminate the sum even
+with zero weight.  The guard therefore returns BOTH a cleaned delta tree
+and the surviving-client mask, and callers must use the cleaned tree.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def delta_norms(deltas) -> jnp.ndarray:
+    """(N,) global L2 norm of each client's delta across all leaves."""
+    sq = sum(jnp.sum(jnp.reshape(leaf, (leaf.shape[0], -1)) ** 2, axis=1)
+             for leaf in jax.tree.leaves(deltas))
+    return jnp.sqrt(sq)
+
+
+def delta_finite(deltas) -> jnp.ndarray:
+    """(N,) bool — True iff every element of the client's delta is finite."""
+    fin = None
+    for leaf in jax.tree.leaves(deltas):
+        f = jnp.all(jnp.isfinite(jnp.reshape(leaf, (leaf.shape[0], -1))),
+                    axis=1)
+        fin = f if fin is None else (fin & f)
+    return fin
+
+
+def quarantine(deltas, produced: jnp.ndarray, clip: float
+               ) -> Tuple:
+    """Clip finite deltas to ``clip`` and zero non-finite ones.
+
+    Returns ``(deltas', ok, n_rejected)`` where ``ok`` is the (N,) bool
+    mask of ``produced`` clients whose delta survived (rejected clients
+    must also be dropped from the merge weights) and ``n_rejected`` is
+    the () int32 count of produced-but-rejected deltas this call."""
+    finite = delta_finite(deltas)
+    norms = delta_norms(deltas)
+    # non-finite norms would poison the scale; rejected rows are zeroed
+    # below anyway, so any placeholder works
+    safe_norm = jnp.where(finite, norms, 1.0)
+    scale = jnp.minimum(1.0, clip / jnp.maximum(safe_norm, 1e-30))
+    keep = (finite & produced).astype(jnp.float32) * scale
+
+    def clean(leaf):
+        k = keep.reshape((-1,) + (1,) * (leaf.ndim - 1))
+        # zero-out first so 0 · NaN never occurs: where() selects, it
+        # does not multiply
+        z = jnp.where(jnp.isfinite(leaf), leaf, 0.0)
+        return z * k
+
+    ok = produced & finite
+    n_rejected = jnp.sum(produced & ~finite, dtype=jnp.int32)
+    return jax.tree.map(clean, deltas), ok, n_rejected

@@ -1,0 +1,125 @@
+"""Pure, jittable fault-injection processes (DESIGN.md §12.1).
+
+Every function here is a pure map over (spec constants, a PRNG key, state
+arrays) — scan/vmap/shard-safe, no host calls — and every one is traced
+ONLY when ``EngineSpec.faults`` is set, so the no-fault program carries
+zero bytes of this module.
+
+PRNG discipline: the engine derives ONE fault key per round by folding a
+fixed tag into the round's fading key (``fault_key``).  ``fold_in`` gives
+an independent stream without consuming a split from the round layout
+(``engine.round_keys``), so the fade/assoc/alloc/train streams — and with
+them every golden trajectory — are untouched by the fault layer's draws.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.faults.spec import FaultSpec
+
+# the fold_in tag for the per-round fault stream (an arbitrary constant;
+# what matters is that it is fixed, so runs are reproducible)
+_FAULT_STREAM = 0xFA117
+
+# distance pushed far past any coverage radius: a dead edge is simply
+# unreachable, so the unchanged association pipeline routes around it
+DEAD_EDGE_DIST = 1e9
+
+
+def fault_key(k_fade) -> jnp.ndarray:
+    """The round's fault-stream key (independent of the round layout)."""
+    return jax.random.fold_in(k_fade, _FAULT_STREAM)
+
+
+def advance_edges(fspec: FaultSpec, key, edge_up: jnp.ndarray
+                  ) -> jnp.ndarray:
+    """One Markov churn step over the live-edge mask.
+
+    Live edges die with ``edge_p_kill``; dead edges respawn with
+    ``edge_p_respawn``.  A step that would leave fewer than
+    ``min_edges_up`` live edges is vetoed wholesale (the previous mask is
+    kept): orphaned clients re-associating through a smaller frontier is
+    the degradation under test, a zero-edge federation is not."""
+    u = jax.random.uniform(key, edge_up.shape)
+    up = edge_up > 0
+    nxt = jnp.where(up, u >= fspec.edge_p_kill, u < fspec.edge_p_respawn)
+    ok = jnp.sum(nxt) >= min(int(fspec.min_edges_up), edge_up.shape[0])
+    return jnp.where(ok, nxt, up).astype(jnp.float32)
+
+
+def masked_dist(dist: jnp.ndarray, edge_up: jnp.ndarray) -> jnp.ndarray:
+    """The association view of the distance field: dead edges are pushed
+    out of every coverage disk, so the dense coverage mask — and the
+    candidate frontier's validity — excludes them with zero new logic."""
+    return jnp.where(edge_up[None, :] > 0, dist, DEAD_EDGE_DIST)
+
+
+def uplink_loss_prob(fspec: FaultSpec, gains: jnp.ndarray,
+                     edge_up: jnp.ndarray) -> jnp.ndarray:
+    """(N,) per-client upload-loss probability, tied to channel quality.
+
+    The proxy: a client's best live-edge gain, normalised by the cohort
+    max — the client with the best channel loses with ``uplink_p_loss``,
+    the worst with ``uplink_p_loss + uplink_loss_slope`` (clipped to
+    0.95 so no client is deterministically unreachable)."""
+    live = jnp.where(edge_up[None, :] > 0, gains, 0.0)
+    best = jnp.max(live, axis=1)                               # (N,)
+    q = best / jnp.maximum(jnp.max(best), 1e-30)               # (0, 1]
+    p = fspec.uplink_p_loss + fspec.uplink_loss_slope * (1.0 - q)
+    return jnp.clip(p, 0.0, 0.95)
+
+
+def draw_losses(fspec: FaultSpec, key, gains: jnp.ndarray,
+                edge_up: jnp.ndarray, active: jnp.ndarray) -> jnp.ndarray:
+    """(N,) bool — which of the ``active`` uploads are lost this step."""
+    u = jax.random.uniform(key, active.shape)
+    return active & (u < uplink_loss_prob(fspec, gains, edge_up))
+
+
+def draw_crashes(fspec: FaultSpec, key, admitted: jnp.ndarray
+                 ) -> jnp.ndarray:
+    """(N,) bool — which admitted clients crash mid-round (compute is
+    billed upstream; the caller discards their deltas)."""
+    u = jax.random.uniform(key, admitted.shape)
+    return admitted & (u < fspec.client_p_crash)
+
+
+def poison_deltas(fspec: FaultSpec, key, deltas, produced: jnp.ndarray
+                  ) -> Tuple:
+    """Corrupt a Bernoulli subset of the ``produced`` deltas.
+
+    Returns ``(deltas', poisoned)``.  Corruption is a huge scale factor
+    (``poison_scale``) or a NaN fill (``poison_nan``) — both must be
+    caught by ``faults.guard`` before any aggregation touches them."""
+    u = jax.random.uniform(key, produced.shape)
+    poisoned = produced & (u < fspec.p_poison)
+
+    def corrupt(leaf):
+        m = poisoned.reshape((-1,) + (1,) * (leaf.ndim - 1))
+        bad = leaf + jnp.nan if fspec.poison_nan else leaf * fspec.poison_scale
+        return jnp.where(m, bad, leaf)
+
+    return jax.tree.map(corrupt, deltas), poisoned
+
+
+def backoff_s(fspec: FaultSpec, attempts: jnp.ndarray) -> jnp.ndarray:
+    """Exponential backoff delay for retry number ``attempts`` (0-based):
+    ``backoff_base_s · backoff_factor^attempts``."""
+    return fspec.backoff_base_s * jnp.power(
+        jnp.float32(fspec.backoff_factor), attempts.astype(jnp.float32))
+
+
+def orphan_count(dist: jnp.ndarray, edge_up: jnp.ndarray,
+                 coverage_radius_m: float, avail) -> jnp.ndarray:
+    """() int32 — available clients with ≥ 1 in-coverage edge but ZERO
+    live in-coverage edges: the clients edge churn cut off this round,
+    who must re-associate through the surviving frontier."""
+    cov = dist <= coverage_radius_m                            # (N, M)
+    live = cov & (edge_up[None, :] > 0)
+    orphaned = jnp.any(cov, axis=1) & ~jnp.any(live, axis=1)
+    if avail is not None:
+        orphaned = orphaned & (avail > 0)
+    return jnp.sum(orphaned, dtype=jnp.int32)

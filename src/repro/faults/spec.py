@@ -1,0 +1,115 @@
+"""Fault-injection spec + state (DESIGN.md §12).
+
+The round engine's robustness layer follows the same static-flag
+discipline as telemetry (§10) and the buffered engine (§11):
+
+* ``FaultSpec`` — a frozen (hashable) dataclass hanging off
+  ``EngineSpec.faults``.  ``None`` (the default) keeps every fault path
+  STRUCTURALLY absent: no fault state rides the carry, no fault op is
+  traced, and every committed golden stays bit-exact un-re-recorded.
+* ``FaultState`` — the pytree that rides in ``RoundState.faults`` when
+  faults are on: the live-edge mask the churn process evolves, the
+  per-client retry ledger the buffered engine's backoff consumes, and
+  cumulative counters for the degradation events (retries, drops,
+  quarantines, crashes) so a run's fault history survives in the final
+  carry even without telemetry.
+
+The spec's numbers are TRACE-TIME constants (like ``timeout_s``): two
+fault parameterisations are two compiles.  That is deliberate — fault
+probabilities select program structure (e.g. ``edge_p_kill=0`` skips the
+churn ops entirely is NOT done; the whole FaultSpec is one switch), and a
+chaos sweep runs a handful of fault cells, not thousands.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """Static fault-injection + graceful-degradation knobs.
+
+    Injection processes (all per-round / per-micro-step Bernoulli draws
+    from a PRNG stream folded off the round key, so the no-fault stream
+    is untouched):
+
+    * **edge churn** — each live edge dies with ``edge_p_kill``, each dead
+      edge respawns with ``edge_p_respawn`` (a two-state Markov chain over
+      ``FaultState.edge_up``).  A step that would leave fewer than
+      ``min_edges_up`` live edges is vetoed (the previous mask is kept):
+      a federation with zero reachable edges is a dead experiment, not a
+      degraded one.
+    * **uplink loss** — a finished upload is lost with a channel-tied
+      probability: ``uplink_p_loss`` at the best observed channel rising
+      by ``uplink_loss_slope`` toward the worst (a monotone SINR proxy —
+      the weaker the client's best live-edge gain, the likelier the
+      drop).
+    * **client crash** — an admitted client crashes mid-round with
+      ``client_p_crash``: its compute is billed (the energy was spent)
+      but its delta never reaches aggregation.
+    * **poisoning** — with ``p_poison`` a produced delta is corrupted
+      (scaled by ``poison_scale``, or NaN-filled when ``poison_nan``):
+      the stress input the quarantine guard must absorb.
+
+    Graceful degradation:
+
+    * **retry/backoff** (buffered engine) — a lost upload re-enters
+      flight with finish time ``clock + backoff_base_s ·
+      backoff_factor^attempt`` for up to ``max_attempts`` attempts, then
+      is dropped and counted.
+    * **quarantine** — every delta reaching aggregation is L2-clipped to
+      ``quarantine_clip`` and NaN/Inf-rejected (``faults.guard``).
+    * **min participation** — the buffered merge applies only when the
+      buffer holds ≥ ``min_participation`` updates; a churn-starved
+      buffer keeps accumulating across timeout resets instead of
+      applying near-empty merges (at the default 1 this is bit-identical
+      to the guard-less trigger).
+    """
+    # edge-server churn (Markov kill/respawn over FaultState.edge_up)
+    edge_p_kill: float = 0.0
+    edge_p_respawn: float = 0.25
+    min_edges_up: int = 1
+    # SINR-tied Bernoulli uplink loss
+    uplink_p_loss: float = 0.0
+    uplink_loss_slope: float = 0.0
+    # mid-round client crash (compute billed, delta lost)
+    client_p_crash: float = 0.0
+    # delta poisoning (stress input for the quarantine guard)
+    p_poison: float = 0.0
+    poison_scale: float = 1e6
+    poison_nan: bool = False
+    # retry/backoff (buffered engine uplink re-entry)
+    max_attempts: int = 3
+    backoff_base_s: float = 2.0
+    backoff_factor: float = 2.0
+    # graceful degradation
+    quarantine_clip: float = 100.0
+    min_participation: int = 1
+
+
+class FaultState(NamedTuple):
+    """Fault-layer carry (rides in ``RoundState.faults``; ``None`` — zero
+    leaves, zero program bytes — when ``EngineSpec.faults`` is ``None``).
+
+    ``edge_up`` is float (1.0/0.0) so it multiplies masks directly;
+    ``attempts`` is the CURRENT upload's retry count (reset on each new
+    admission); the ``n_*`` counters are cumulative over the run."""
+    edge_up: jnp.ndarray        # (M,) f32 live-edge mask
+    attempts: jnp.ndarray       # (N,) int32 retries of the in-flight upload
+    n_retries: jnp.ndarray      # () int32 cumulative uplink retries
+    n_dropped: jnp.ndarray      # () int32 uploads dropped after max_attempts
+    n_quarantined: jnp.ndarray  # () int32 deltas rejected by the guard
+    n_crashed: jnp.ndarray      # () int32 mid-round client crashes
+
+
+def init_faults(cfg) -> FaultState:
+    """All edges up, no retries, zeroed counters."""
+    i32 = jnp.int32
+    z = jnp.zeros((), i32)
+    return FaultState(
+        edge_up=jnp.ones((cfg.n_edges,), jnp.float32),
+        attempts=jnp.zeros((cfg.n_clients,), i32),
+        n_retries=z, n_dropped=z, n_quarantined=z, n_crashed=z)

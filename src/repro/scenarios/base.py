@@ -51,6 +51,8 @@ _DROPOUT = "markov_dropout"
 _HETERO = "hetero_devices"
 _PARTS = (_MOBILE, _DROPOUT, _HETERO)
 _FLASH = "flash_crowd"
+_REGIONAL = "regional_outage"
+_DIURNAL = "diurnal"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,6 +70,14 @@ class ScenarioSpec:
     # hetero_devices classes
     n_device_classes: int = 4
     kappa_spread: float = 1.0       # κ ∈ cfg.capacitance · [1, 1+spread]
+    # regional_outage: radius of the outage disk as a fraction of the area
+    # side (the numbers land in reused ScenarioState slots — see the
+    # transition's docstring)
+    outage_radius_frac: float = 0.35
+    # diurnal load curve: availability oscillates with this period
+    # (rounds) down to `diurnal_floor` at the trough
+    diurnal_period_rounds: float = 24.0
+    diurnal_floor: float = 0.2
 
     @property
     def parts(self) -> tuple:
@@ -150,15 +160,28 @@ def init_scenario(cfg, sspec: ScenarioSpec, rng: np.random.Generator,
         speed = np.zeros((n,), f32)
         waypoint = pos.copy()
 
-    if _DROPOUT in parts or sspec.kind == _FLASH:
-        # flash_crowd reuses the dropout parameter slots: p_drop is the
-        # per-round decay probability, p_return the per-round BURST
-        # probability (see ``flash_crowd_transition``)
+    if _DROPOUT in parts or sspec.kind in (_FLASH, _REGIONAL, _DIURNAL):
+        # flash_crowd / regional_outage / diurnal reuse the dropout
+        # parameter slots: p_drop is the decay / outage-event / phase-step
+        # probability, p_return the burst / recovery probability (or the
+        # diurnal floor) — see each transition's docstring
         p_drop = np.full((n,), sspec.p_drop, f32)
         p_return = np.full((n,), sspec.p_return, f32)
     else:
         p_drop = np.zeros((n,), f32)
         p_return = np.ones((n,), f32)
+
+    if sspec.kind == _REGIONAL:
+        # the speed slot (unused: no mobility) carries the outage radius
+        speed = np.full((n,), sspec.outage_radius_frac * cfg.area_side_m,
+                        f32)
+    elif sspec.kind == _DIURNAL:
+        # p_drop slot: per-round phase increment; p_return slot: the
+        # availability floor; speed slot: the running phase accumulator
+        p_drop = np.full((n,), 2.0 * np.pi
+                         / max(sspec.diurnal_period_rounds, 1e-6), f32)
+        p_return = np.full((n,), sspec.diurnal_floor, f32)
+        speed = np.zeros((n,), f32)
 
     if _HETERO in parts:
         cls = rng.integers(0, sspec.n_device_classes, n)
@@ -249,11 +272,65 @@ def flash_crowd_transition(cfg, key, s: ScenarioState) -> ScenarioState:
     return s._replace(avail=avail.astype(jnp.float32))
 
 
+def regional_outage_transition(cfg, key, s: ScenarioState) -> ScenarioState:
+    """Correlated regional outages: whole NEIGHBOURHOODS go dark at once.
+
+    With probability ``mean(p_drop)`` per round an outage event strikes a
+    uniformly-drawn centre, and every client within the outage radius
+    drops TOGETHER — the spatially-correlated failure mode (backhaul cut,
+    local power loss) that independent per-client dropout chains cannot
+    produce, and the stress input for the fault layer's edge-churn +
+    re-association machinery (DESIGN.md §12).  Between events, downed
+    clients recover independently with ``mean(p_return)`` per round.
+
+    Parameter reuse (the ``flash_crowd`` precedent): ``p_drop`` is the
+    event probability, ``p_return`` the recovery probability, and the
+    (motionless) ``speed`` slot carries the outage radius in metres
+    (``init_scenario`` fills all three for kind="regional_outage").
+    """
+    k_evt, k_ctr, k_rec = jax.random.split(key, 3)
+    event = jax.random.uniform(k_evt, ()) < jnp.mean(s.p_drop)
+    centre = jax.random.uniform(k_ctr, (2,), minval=0.0,
+                                maxval=cfg.area_side_m)
+    hit = jnp.linalg.norm(s.pos - centre[None, :], axis=-1) \
+        <= jnp.mean(s.speed)
+    up = s.avail > 0
+    recovered = ~up & (jax.random.uniform(k_rec, s.avail.shape)
+                       < jnp.mean(s.p_return))
+    avail = (up | recovered) & ~(event & hit)
+    return s._replace(avail=avail.astype(jnp.float32))
+
+
+def diurnal_transition(cfg, key, s: ScenarioState) -> ScenarioState:
+    """Diurnal load curve: fleet availability breathes sinusoidally.
+
+    The target availability level is ``floor + (1-floor) · (1+sin φ)/2``
+    with the phase φ advancing by a fixed increment per round (one full
+    cycle every ``diurnal_period_rounds``); each client is then
+    independently available with that probability — the day/night
+    participation rhythm of real cross-device federations, which the
+    buffered engine's fill-or-timeout trigger must ride out without
+    starving (DESIGN.md §12).
+
+    Parameter reuse: ``p_drop`` carries the per-round phase increment,
+    ``p_return`` the availability floor, and the (motionless) ``speed``
+    slot accumulates the running phase.
+    """
+    del cfg
+    phase = s.speed + s.p_drop                 # (N,) — uniform by init
+    floor = s.p_return
+    level = floor + (1.0 - floor) * 0.5 * (1.0 + jnp.sin(phase))
+    avail = jax.random.uniform(key, s.avail.shape) < level
+    return s._replace(avail=avail.astype(jnp.float32), speed=phase)
+
+
 Transition = Callable[..., ScenarioState]
 
 TRANSITIONS: Dict[str, Transition] = {"static": static_transition,
                                       "dynamic": advance_dynamic,
-                                      _FLASH: flash_crowd_transition}
+                                      _FLASH: flash_crowd_transition,
+                                      _REGIONAL: regional_outage_transition,
+                                      _DIURNAL: diurnal_transition}
 # the named parts (and every "+"-mixture of them, any order) run the same
 # data-parameterised program; registering them lets
 # EngineSpec(scenario="random_waypoint") work directly, at the price of one
@@ -296,6 +373,13 @@ PRESETS: Dict[str, ScenarioSpec] = {
     # returns every dropped client at once with prob p_return per round
     "flash_crowd": ScenarioSpec(kind="flash_crowd", p_drop=0.25,
                                 p_return=0.15),
+    # spatially-correlated outages: with prob p_drop per round a disk of
+    # clients goes dark together; survivors recover with p_return
+    "regional_outage": ScenarioSpec(kind="regional_outage", p_drop=0.2,
+                                    p_return=0.4),
+    # day/night participation rhythm: availability breathes sinusoidally
+    # between the floor and 1 over diurnal_period_rounds
+    "diurnal": ScenarioSpec(kind="diurnal"),
 }
 
 

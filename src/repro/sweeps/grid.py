@@ -37,6 +37,7 @@ import numpy as np
 
 from repro import scenarios
 from repro.core import engine
+from repro.faults import FaultSpec
 
 
 @dataclasses.dataclass(frozen=True)
@@ -98,6 +99,10 @@ class SweepGrid:
     timeout_s: float = 10.0
     n_tiers: int = 4
     retier_every: int = 8
+    # fault injection (DESIGN.md §12): a FaultSpec turns every cell into
+    # a chaos cell (edge churn, uplink loss, quarantine...); None keeps
+    # the fault layer structurally absent
+    faults: "FaultSpec | None" = None
     # per-group DDPG training budget (used when the grid has
     # allocator="ddpg" cells and no pre-trained actor is supplied)
     ddpg_episodes: int = 12
@@ -143,7 +148,8 @@ def _spec_for(cell: SweepCell, grid: SweepGrid) -> engine.EngineSpec:
                              buffer_fill=grid.buffer_fill,
                              timeout_s=grid.timeout_s,
                              n_tiers=grid.n_tiers,
-                             retier_every=grid.retier_every)
+                             retier_every=grid.retier_every,
+                             faults=grid.faults)
 
 
 def _group_cells(cells: Sequence[SweepCell], grid: SweepGrid
@@ -204,7 +210,9 @@ def run_sweep(cfg, grid: SweepGrid, *, out_dir: str = "results",
                                                    scenario=c.sspec)[:2]
         return init_cache[k]
 
-    for spec, members in groups.items():
+    failed: Dict[str, str] = {}
+
+    def _run_group(spec: engine.EngineSpec, members: List[SweepCell]) -> None:
         pairs = [_init(c) for c in members]
         states, bundles = engine.stack_fleet(pairs)
         cell_actors, train_s = None, 0.0
@@ -279,6 +287,19 @@ def run_sweep(cfg, grid: SweepGrid, *, out_dir: str = "results",
                             f"{cell.cell_id}.trace.json"), "w") as fh:
                         json.dump(tp, fh, indent=1)
 
+    for spec, members in groups.items():
+        # one crashed group (a divergent chaos cell, an OOM'd compile)
+        # must not take down the rest of the sweep: record the failure
+        # against every member cell and keep going
+        try:
+            _run_group(spec, members)
+        except Exception as exc:  # noqa: BLE001
+            for cell in members:
+                failed[cell.cell_id] = repr(exc)
+            timings.append({"spec": dataclasses.asdict(spec),
+                            "n_cells": len(members),
+                            "error": repr(exc)})
+
     summary = {
         "name": grid.name,
         "n_cells": len(cells),
@@ -294,6 +315,7 @@ def run_sweep(cfg, grid: SweepGrid, *, out_dir: str = "results",
                  "engine_modes": list(grid.engine_modes)},
         "groups": timings,
         "final": summarize(per_cell),
+        "failed_cells": failed,
     }
     if write_json:
         with open(os.path.join(sweep_dir, "summary.json"), "w") as fh:
@@ -334,20 +356,37 @@ def main(argv=None) -> None:
     ap.add_argument("--buffered", action="store_true",
                     help="add the semi-async buffered engine as a second "
                          "engine-mode axis value (DESIGN.md §11)")
+    ap.add_argument("--faults", action="store_true",
+                    help="run the chaos-smoke grid instead: the buffered "
+                         "engine under edge churn + SINR-tied uplink loss "
+                         "with telemetry on (DESIGN.md §12)")
     args = ap.parse_args(argv)
 
     cfg = dc.replace(CONFIG, n_clients=32, n_edges=4, min_samples=60,
                      max_samples=120, hidden=32, input_dim=64)
-    grid = SweepGrid(
-        name="demo",
-        scenarios=("static", "random_waypoint", "markov_dropout",
-                   "hetero_devices", "full_dynamic", "flash_crowd"),
-        policies=("fcea", "gcea"),
-        seeds=(0,) if args.quick else (0, 1),
-        n_rounds=3 if args.quick else 10,
-        candidates_k=args.candidates,
-        telemetry=args.telemetry,
-        engine_modes=("sync", "buffered") if args.buffered else ("sync",))
+    if args.faults:
+        grid = SweepGrid(
+            name="chaos",
+            scenarios=("static", "markov_dropout"),
+            policies=("gcea",),
+            seeds=(0,) if args.quick else (0, 1),
+            n_rounds=3 if args.quick else 10,
+            candidates_k=args.candidates,
+            telemetry=True,
+            engine_modes=("buffered",),
+            faults=FaultSpec(edge_p_kill=0.2, edge_p_respawn=0.5,
+                             uplink_p_loss=0.1, uplink_loss_slope=0.2))
+    else:
+        grid = SweepGrid(
+            name="demo",
+            scenarios=("static", "random_waypoint", "markov_dropout",
+                       "hetero_devices", "full_dynamic", "flash_crowd"),
+            policies=("fcea", "gcea"),
+            seeds=(0,) if args.quick else (0, 1),
+            n_rounds=3 if args.quick else 10,
+            candidates_k=args.candidates,
+            telemetry=args.telemetry,
+            engine_modes=("sync", "buffered") if args.buffered else ("sync",))
     summary = run_sweep(cfg, grid, out_dir=args.out,
                         mesh=engine.fleet_mesh() if args.sharded else None)
     print(json.dumps({k: summary[k] for k in
@@ -355,6 +394,12 @@ def main(argv=None) -> None:
     for cid, row in summary["final"].items():
         print(f"{cid}: acc={row['accuracy']:.3f} "
               f"cost={row['mean_cost']:.3f} avail={row['n_available']}")
+    if summary["failed_cells"]:
+        for cid, err in summary["failed_cells"].items():
+            print(f"FAILED {cid}: {err}")
+        if not summary["final"]:
+            # every cell failed — the sweep produced nothing usable
+            raise SystemExit(1)
 
 
 if __name__ == "__main__":

@@ -55,18 +55,30 @@ class MemorySink:
 
 class JsonlSink:
     """Appends one JSON object per round: ``{"round": 3, "time_local_s":
-    ..., "edge_load": [...], ...}``.  Usable as a context manager."""
+    ..., "edge_load": [...], ...}``.  Usable as a context manager; the
+    exit path flushes and closes even when the body raised (a crashed
+    chaos sweep keeps every line emitted before the failure), and
+    ``close`` is idempotent — a second close (context exit after a manual
+    close, emit after a failure) is a no-op, never an attribute error."""
 
     def __init__(self, path: str) -> None:
         self.path = path
-        self._fh = open(path, "a")
+        self._fh: Optional[Any] = open(path, "a")
 
     def emit(self, trace: RoundTrace) -> None:
+        if self._fh is None:
+            return
         self._fh.write(json.dumps(trace_record(trace)) + "\n")
         self._fh.flush()
 
     def close(self) -> None:
-        self._fh.close()
+        fh, self._fh = self._fh, None
+        if fh is None:
+            return
+        try:
+            fh.flush()
+        finally:
+            fh.close()
 
     def __enter__(self) -> "JsonlSink":
         return self
@@ -91,11 +103,16 @@ def load_jsonl(path: str) -> Dict[str, np.ndarray]:
     rows = [json.loads(l) for l in open(path) if l.strip()]
     rows.sort(key=lambda r: r["round"])
     int_fields = {"round", "assoc_sweeps", "edge_load", "pdd_iters",
-                  "sic_depth", "stale_hist"}
+                  "sic_depth", "stale_hist", "buffer_fill",
+                  "trigger_cause", "tier_active", "tier_occupancy",
+                  "dead_edges", "orphaned_clients", "uplink_retries",
+                  "uplink_dropped", "quarantined"}
     out = {}
     for name in RoundTrace._fields:
         dtype = np.int32 if name in int_fields else np.float32
-        out[name] = np.asarray([r[name] for r in rows], dtype)
+        # files written before a trace field existed read as zeros, so a
+        # newer loader keeps parsing older sweeps' JSONL
+        out[name] = np.asarray([r.get(name, 0) for r in rows], dtype)
     return out
 
 
@@ -178,8 +195,9 @@ def stream_scanned(cfg, spec, state, bundle, n_rounds: int, sink,
     the stream is a tee, not a different result."""
     _require_telemetry(spec)
     # fix the scan-carry structure up front: buffered specs enter with the
-    # aggregation buffer attached, sync specs with it absent (engine.py §11)
-    state = engine.ensure_buffer(cfg, spec, state)
+    # aggregation buffer attached, faulted specs with the fault state
+    # attached, sync specs with both absent (engine.py §11-§12)
+    state = engine.ensure_carry(cfg, spec, state)
     run = _scan_streaming(cfg, spec, n_rounds, sink, ordered)
     final, (ms, trace) = run(state, bundle, actor_params)
     jax.block_until_ready(ms)
@@ -193,9 +211,9 @@ def stream_scanned_client_sharded(cfg, spec, state, bundle, n_rounds: int,
     ``engine.run_scanned_client_sharded``."""
     _require_telemetry(spec)
     mesh = engine.client_mesh() if mesh is None else mesh
-    # attach the buffer BEFORE padding so its per-client leaves pad and
-    # shard with the rest of the state
-    state = engine.ensure_buffer(cfg, spec, state)
+    # attach the buffer/fault state BEFORE padding so their per-client
+    # leaves pad and shard with the rest of the state
+    state = engine.ensure_carry(cfg, spec, state)
     cfg, state, bundle = engine.pad_clients(cfg, state, bundle,
                                             int(mesh.devices.size))
     state, bundle = engine.shard_clients(state, bundle, mesh)
@@ -221,7 +239,7 @@ def stream_fleet(cfg, spec, states, bundles, n_rounds: int, sink,
     @jax.jit
     def run(states, bundles):
         def one(state, bundle):
-            state = engine.ensure_buffer(cfg, spec, state)
+            state = engine.ensure_carry(cfg, spec, state)
             (final, _), out = jax.lax.scan(step, (state, bundle), None,
                                            length=n_rounds)
             return final, out

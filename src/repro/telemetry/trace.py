@@ -70,6 +70,18 @@ class RoundTrace(NamedTuple):
     * ``trigger_cause``   — 0 = no merge, 1 = fill trigger, 2 = timeout
     * ``tier_active``     — the TiFL tier admitted this micro-step
     * ``tier_occupancy``  — idle-and-available clients of that tier
+
+    Fault layer (DESIGN.md §12; all-zero when ``EngineSpec.faults`` is
+    off):
+
+    * ``dead_edges``       — edges down after this round's churn step
+    * ``orphaned_clients`` — in-coverage clients whose every in-coverage
+      edge is dead (the clients forced to re-associate elsewhere)
+    * ``uplink_retries``   — lost uploads re-entering flight with backoff
+      (buffered engine only; sync has no buffer to retry from)
+    * ``uplink_dropped``   — updates lost for good this round (crashes +
+      uploads out of retry attempts)
+    * ``quarantined``      — deltas the guard rejected (NaN/Inf)
     """
     round: jnp.ndarray               # () int32
     time_local_s: jnp.ndarray        # () f32
@@ -91,6 +103,11 @@ class RoundTrace(NamedTuple):
     trigger_cause: jnp.ndarray       # () int32
     tier_active: jnp.ndarray         # () int32
     tier_occupancy: jnp.ndarray      # () int32
+    dead_edges: jnp.ndarray          # () int32
+    orphaned_clients: jnp.ndarray    # () int32
+    uplink_retries: jnp.ndarray      # () int32
+    uplink_dropped: jnp.ndarray      # () int32
+    quarantined: jnp.ndarray         # () int32
 
 
 def staleness_histogram(staleness: jnp.ndarray) -> jnp.ndarray:
@@ -114,7 +131,10 @@ def round_trace(cfg, spec, *, round_idx: jnp.ndarray, rc_all: cost.RoundCost,
                 dist: jnp.ndarray, avail: Optional[jnp.ndarray],
                 coverage_radius_m: float,
                 buffer: Optional[Tuple[jnp.ndarray, jnp.ndarray,
-                                       jnp.ndarray, jnp.ndarray]] = None
+                                       jnp.ndarray, jnp.ndarray]] = None,
+                faults: Optional[Tuple[jnp.ndarray, jnp.ndarray,
+                                       jnp.ndarray, jnp.ndarray,
+                                       jnp.ndarray]] = None
                 ) -> RoundTrace:
     """Build one round's trace from tensors the round already computed.
 
@@ -125,7 +145,10 @@ def round_trace(cfg, spec, *, round_idx: jnp.ndarray, rc_all: cost.RoundCost,
     ``staleness`` is the POST-update A_n so the histogram matches
     ``avg_staleness``; ``buffer`` is the buffered engine's
     (fill, trigger_cause, tier_active, tier_occupancy) quadruple
-    (``None`` on sync — those leaves read 0).
+    (``None`` on sync — those leaves read 0); ``faults`` is the fault
+    layer's (dead_edges, orphaned_clients, uplink_retries,
+    uplink_dropped, quarantined) quintuple (``None`` with faults off —
+    those leaves read 0).
     """
     f32 = jnp.float32
     associated = jnp.sum(assoc, axis=1) > 0
@@ -168,6 +191,10 @@ def round_trace(cfg, spec, *, round_idx: jnp.ndarray, rc_all: cost.RoundCost,
         zi = jnp.zeros((), jnp.int32)
         buffer = (zi, zi, zi, zi)
     b_fill, b_cause, b_tier, b_occ = buffer
+    if faults is None:
+        zi = jnp.zeros((), jnp.int32)
+        faults = (zi, zi, zi, zi, zi)
+    f_dead, f_orph, f_retry, f_drop, f_quar = faults
     return RoundTrace(
         round=round_idx.astype(jnp.int32),
         time_local_s=(tau2 * jnp.max(bm * t_cmp)).astype(f32),
@@ -188,4 +215,9 @@ def round_trace(cfg, spec, *, round_idx: jnp.ndarray, rc_all: cost.RoundCost,
         buffer_fill=b_fill.astype(jnp.int32),
         trigger_cause=b_cause.astype(jnp.int32),
         tier_active=b_tier.astype(jnp.int32),
-        tier_occupancy=b_occ.astype(jnp.int32))
+        tier_occupancy=b_occ.astype(jnp.int32),
+        dead_edges=f_dead.astype(jnp.int32),
+        orphaned_clients=f_orph.astype(jnp.int32),
+        uplink_retries=f_retry.astype(jnp.int32),
+        uplink_dropped=f_drop.astype(jnp.int32),
+        quarantined=f_quar.astype(jnp.int32))

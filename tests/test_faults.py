@@ -1,0 +1,402 @@
+"""Fault-injection & graceful-degradation tests (DESIGN.md §12).
+
+(a) the static flag: ``EngineSpec.faults=None`` keeps the fault state
+    STRUCTURALLY absent (``ensure_carry`` strips a stale ``FaultState``)
+    and a no-fault run is bit-identical whether or not the fault code
+    exists — the committed goldens stay valid un-re-recorded,
+(b) injection-process units: the churn chain's min-edges veto, the
+    exponential backoff schedule, the SINR-tied loss curve, orphan
+    accounting and the quarantine guard's clip/reject algebra,
+(c) graceful degradation end to end: a killed edge disappears from the
+    association frontier and the cohort re-forms on survivors within one
+    round; a lost uplink re-enters flight with backoff and either lands
+    or is dropped after ``max_attempts``; an all-NaN poisoned round
+    leaves the global model bit-unchanged; a scaled poisoned round is
+    clipped to the quarantine sphere,
+(d) run-level fault tolerance: ``run_scanned_resumable`` interrupted
+    mid-run (max_segments=1) resumes to a trajectory BIT-IDENTICAL to
+    the uninterrupted scan, typed PRNG key included, and the checkpoint
+    store round-trips the full buffered+faulted carry exactly,
+(e) the chaos sweep axis: a ``SweepGrid(faults=...)`` runs end to end,
+    and a crashed group is isolated into ``summary["failed_cells"]``
+    instead of killing the sweep.
+"""
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import store
+from repro.configs.hfl_mnist import CONFIG
+from repro.core import engine
+from repro.faults import FaultSpec, FaultState, guard, inject
+from repro.faults.resume import run_scanned_resumable
+
+SMALL = dataclasses.replace(CONFIG, n_clients=16, n_edges=2,
+                            clients_per_edge=3, min_samples=60,
+                            max_samples=120, hidden=32, input_dim=64)
+ROUNDS = 4
+
+SPEC_SYNC = engine.EngineSpec(policy="gcea", scheduler="fastest")
+SPEC_BUF = engine.EngineSpec(policy="gcea", scheduler="fastest",
+                             engine_mode="buffered", n_tiers=2,
+                             retier_every=3, timeout_s=5.0)
+# churn frozen (kill=respawn=0): a pre-set edge_up mask stays put, so the
+# degradation under test is deterministic
+FROZEN = dict(edge_p_kill=0.0, edge_p_respawn=0.0)
+
+
+def _faulted(spec, **kw):
+    return dataclasses.replace(spec, faults=FaultSpec(**kw))
+
+
+def _tree_equal(a, b, msg=""):
+    fa, _ = jax.tree_util.tree_flatten(a)
+    fb, _ = jax.tree_util.tree_flatten(b)
+    assert len(fa) == len(fb), msg
+    for la, lb in zip(fa, fb):
+        if (isinstance(la, jax.Array)
+                and jax.dtypes.issubdtype(la.dtype, jax.dtypes.prng_key)):
+            la, lb = jax.random.key_data(la), jax.random.key_data(lb)
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb),
+                                      err_msg=msg)
+
+
+def _delta_norm(a, b):
+    return float(jnp.sqrt(sum(
+        jnp.sum((x - y) ** 2) for x, y in
+        zip(jax.tree.leaves(a), jax.tree.leaves(b)))))
+
+
+# -- (a) static flag: structural absence + no-fault bit-parity ---------------
+
+def test_ensure_carry_attaches_and_strips_fault_state():
+    spec_f = _faulted(SPEC_SYNC, edge_p_kill=0.3)
+    state, bundle, _ = engine.init_simulation(SMALL, seed=0)
+    with_f = engine.ensure_carry(SMALL, spec_f, state)
+    assert isinstance(with_f.faults, FaultState)
+    assert with_f.faults.edge_up.shape == (SMALL.n_edges,)
+    # faults-off spec strips a stale FaultState (e.g. a spec change
+    # between runs); normalised states pass through untouched
+    stripped = engine.ensure_carry(SMALL, SPEC_SYNC, with_f)
+    assert stripped.faults is None
+    assert engine.ensure_carry(SMALL, SPEC_SYNC, state) is state
+    assert engine.ensure_carry(SMALL, spec_f, with_f) is with_f
+
+
+def test_no_fault_run_ignores_stale_fault_state():
+    """run_scanned with faults=None produces the same trajectory whether
+    the input carry holds a stale FaultState or not — ensure_carry
+    normalises before tracing, so the no-fault program never sees it."""
+    state, bundle, _ = engine.init_simulation(SMALL, seed=0)
+    stale = engine.ensure_carry(SMALL, _faulted(SPEC_SYNC), state)
+    f_clean, ms_clean = engine.run_scanned(SMALL, SPEC_SYNC, state, bundle,
+                                           ROUNDS)
+    f_stale, ms_stale = engine.run_scanned(SMALL, SPEC_SYNC, stale, bundle,
+                                           ROUNDS)
+    _tree_equal(ms_clean, ms_stale, "metrics")
+    assert f_stale.faults is None
+    _tree_equal(f_clean.global_params, f_stale.global_params, "global")
+
+
+# -- (b) injection-process units ---------------------------------------------
+
+def test_advance_edges_min_edges_veto():
+    fsp = FaultSpec(edge_p_kill=1.0, edge_p_respawn=0.0, min_edges_up=1)
+    up = jnp.ones((3,), jnp.float32)
+    # kill=1 would leave zero live edges — the step is vetoed wholesale
+    nxt = inject.advance_edges(fsp, jax.random.key(0), up)
+    np.testing.assert_array_equal(np.asarray(nxt), np.ones(3, np.float32))
+    # with the veto disabled the same draw kills everything
+    fsp0 = dataclasses.replace(fsp, min_edges_up=0)
+    nxt0 = inject.advance_edges(fsp0, jax.random.key(0), up)
+    np.testing.assert_array_equal(np.asarray(nxt0), np.zeros(3, np.float32))
+
+
+def test_advance_edges_frozen_chain_is_identity():
+    fsp = FaultSpec(**FROZEN)
+    up = jnp.asarray([0.0, 1.0, 1.0], jnp.float32)
+    nxt = inject.advance_edges(fsp, jax.random.key(7), up)
+    np.testing.assert_array_equal(np.asarray(nxt), np.asarray(up))
+
+
+def test_backoff_schedule_is_exponential():
+    fsp = FaultSpec(backoff_base_s=2.0, backoff_factor=3.0)
+    got = inject.backoff_s(fsp, jnp.asarray([0, 1, 2], jnp.int32))
+    np.testing.assert_allclose(np.asarray(got), [2.0, 6.0, 18.0], rtol=1e-6)
+
+
+def test_uplink_loss_prob_tied_to_channel():
+    fsp = FaultSpec(uplink_p_loss=0.1, uplink_loss_slope=0.4)
+    gains = jnp.asarray([[1.0, 0.0], [0.5, 0.0], [1e-9, 0.0]])
+    p = np.asarray(inject.uplink_loss_prob(
+        fsp, gains, jnp.ones((2,), jnp.float32)))
+    assert p[0] == pytest.approx(0.1, abs=1e-6)       # best channel: floor
+    assert p[1] == pytest.approx(0.3, abs=1e-6)       # halfway up the slope
+    assert p[2] == pytest.approx(0.5, abs=1e-4)       # worst: floor + slope
+    assert np.all(p <= 0.95)
+    # a dead best edge worsens the proxy: client 1's best LIVE gain drops
+    p_dead = np.asarray(inject.uplink_loss_prob(
+        fsp, jnp.asarray([[1.0, 0.9], [0.5, 0.1]]),
+        jnp.asarray([0.0, 1.0], jnp.float32)))
+    assert p_dead[1] > p_dead[0]
+
+
+def test_orphan_count_requires_all_covering_edges_dead():
+    radius = 10.0
+    #            edge0  edge1
+    dist = jnp.asarray([[5.0, 50.0],     # covered by edge 0 only
+                        [5.0, 5.0],      # covered by both
+                        [50.0, 50.0]])   # out of coverage entirely
+    dead0 = jnp.asarray([0.0, 1.0], jnp.float32)
+    assert int(inject.orphan_count(dist, dead0, radius, None)) == 1
+    all_up = jnp.ones((2,), jnp.float32)
+    assert int(inject.orphan_count(dist, all_up, radius, None)) == 0
+    all_dead = jnp.zeros((2,), jnp.float32)
+    assert int(inject.orphan_count(dist, all_dead, radius, None)) == 2
+    # unavailable clients don't count as orphans
+    avail = jnp.asarray([0.0, 1.0, 1.0])
+    assert int(inject.orphan_count(dist, dead0, radius, avail)) == 0
+
+
+def test_quarantine_rejects_nonfinite_and_clips():
+    deltas = {"w": jnp.asarray([[3.0, 4.0],        # norm 5 — clipped
+                                [jnp.nan, 1.0],    # rejected
+                                [0.1, 0.0],        # small — untouched
+                                [9.9, 9.9]])}      # not produced
+    produced = jnp.asarray([True, True, True, False])
+    cleaned, ok, n_rej = guard.quarantine(deltas, produced, clip=1.0)
+    c = np.asarray(cleaned["w"])
+    assert np.all(np.isfinite(c))                  # zero-first: no NaN out
+    np.testing.assert_allclose(np.linalg.norm(c[0]), 1.0, rtol=1e-5)
+    np.testing.assert_array_equal(c[1], [0.0, 0.0])
+    np.testing.assert_allclose(c[2], [0.1, 0.0], rtol=1e-6)
+    np.testing.assert_array_equal(c[3], [0.0, 0.0])
+    np.testing.assert_array_equal(np.asarray(ok), [True, False, True, False])
+    assert int(n_rej) == 1
+
+
+# -- (c) graceful degradation end to end -------------------------------------
+
+def _kill_edge(cfg, spec, state, dead_idx):
+    state = engine.ensure_carry(cfg, spec, state)
+    up = np.ones((cfg.n_edges,), np.float32)
+    up[dead_idx] = 0.0
+    return state._replace(faults=state.faults._replace(
+        edge_up=jnp.asarray(up)))
+
+
+@pytest.mark.parametrize("candidates_k", [None, 2])
+def test_dead_edge_masked_from_frontier_cohort_reforms(candidates_k):
+    """With edge 0 killed (frozen churn), no client associates to it and
+    the cohort re-forms on the survivor within the very first round —
+    on both the dense path and the (N, K) candidate frontier."""
+    spec = dataclasses.replace(_faulted(SPEC_SYNC, **FROZEN),
+                               telemetry=True, candidates_k=candidates_k)
+    state, bundle, _ = engine.init_simulation(SMALL, seed=0)
+    state = _kill_edge(SMALL, spec, state, dead_idx=0)
+    final, out = engine.run_scanned(SMALL, spec, state, bundle, ROUNDS)
+    ms, tr = engine.split_output(spec, out)
+    load = np.asarray(tr.edge_load)                       # (R, M)
+    assert np.all(load[:, 0] == 0), "dead edge admitted clients"
+    assert np.all(load[:, 1] > 0), "cohort failed to re-form on survivor"
+    np.testing.assert_array_equal(np.asarray(tr.dead_edges), ROUNDS * [1])
+    assert np.all(np.asarray(ms.n_associated) > 0)
+    # the survivor keeps training the model: metrics stay finite
+    assert np.all(np.isfinite(np.asarray(ms.loss)))
+    np.testing.assert_array_equal(np.asarray(final.faults.edge_up), [0., 1.])
+
+
+def test_all_nan_poison_leaves_global_bit_unchanged():
+    """p_poison=1 + NaN fill: every delta is quarantined, so the global
+    model never moves — bit-exactly — and nothing non-finite escapes."""
+    spec = _faulted(SPEC_SYNC, **FROZEN, p_poison=1.0, poison_nan=True)
+    state, bundle, _ = engine.init_simulation(SMALL, seed=0)
+    final, ms = engine.run_scanned(SMALL, spec, state, bundle, ROUNDS)
+    _tree_equal(final.global_params, state.global_params,
+                "global model moved despite all-NaN quarantine")
+    assert int(final.faults.n_quarantined) > 0
+    assert np.all(np.isfinite(np.asarray(ms.loss)))
+    assert np.all(np.isfinite(np.asarray(ms.accuracy)))
+
+
+def test_scaled_poison_clipped_to_quarantine_sphere():
+    """Finite but huge deltas (×1e6) pass the guard CLIPPED: the merge
+    moves the global model, but at most ``quarantine_clip`` per round."""
+    clip = 1.0
+    spec = _faulted(SPEC_SYNC, **FROZEN, p_poison=1.0, poison_scale=1e6,
+                    quarantine_clip=clip)
+    state, bundle, _ = engine.init_simulation(SMALL, seed=0)
+    prev = state.global_params
+    moved = 0.0
+    for _ in range(2):
+        state, _ = jax.block_until_ready(
+            engine.run_scanned(SMALL, spec, state, bundle, 1))
+        step = _delta_norm(state.global_params, prev)
+        assert step <= clip * (1.0 + 1e-4), "delta escaped the clip sphere"
+        moved = max(moved, step)
+        prev = state.global_params
+    assert moved > 0.0, "clipped deltas should still move the model"
+    assert int(state.faults.n_quarantined) == 0    # clipped, not rejected
+
+
+def test_buffered_uplink_loss_retries_then_drops():
+    """Near-certain uplink loss: every landing re-enters flight with
+    backoff until ``max_attempts``, then is dropped and counted; the
+    retry ledger never exceeds the cap."""
+    spec = _faulted(SPEC_BUF, **FROZEN, uplink_p_loss=0.95,
+                    max_attempts=2, backoff_base_s=0.1)
+    state, bundle, _ = engine.init_simulation(SMALL, seed=0)
+    final, ms = engine.run_scanned(SMALL, spec, state, bundle, 32)
+    flt = final.faults
+    assert int(flt.n_retries) > 0, "no uplink retry ever happened"
+    assert int(flt.n_dropped) > 0, "no upload exhausted its attempts"
+    assert int(np.max(np.asarray(flt.attempts))) <= 2
+    assert np.all(np.isfinite(np.asarray(ms.loss)))
+
+
+def test_buffered_moderate_loss_still_merges():
+    """A lossy-but-survivable uplink (30%): retries land eventually and
+    the buffered merge keeps firing (version advances)."""
+    spec = _faulted(SPEC_BUF, **FROZEN, uplink_p_loss=0.3, max_attempts=3)
+    state, bundle, _ = engine.init_simulation(SMALL, seed=0)
+    final, _ = engine.run_scanned(SMALL, spec, state, bundle, 24)
+    assert int(final.buffer.version) > 0
+    assert int(final.faults.n_retries) > 0
+
+
+def test_buffered_min_participation_blocks_merge():
+    """min_participation above any reachable fill: triggers keep firing
+    (the clock must not freeze) but no merge ever applies."""
+    spec = _faulted(SPEC_BUF, **FROZEN,
+                    min_participation=SMALL.n_clients + 1)
+    state, bundle, _ = engine.init_simulation(SMALL, seed=0)
+    final, _ = engine.run_scanned(SMALL, spec, state, bundle, 16)
+    assert int(final.buffer.version) == 0
+    assert float(final.buffer.clock_s) > 0.0
+
+
+# -- (d) checkpoint round-trip + resumable bit-identity ----------------------
+
+def test_checkpoint_roundtrips_full_faulted_carry(tmp_path):
+    """The full buffered+faulted scan carry — BufferState, FaultState and
+    the TYPED PRNG key — survives save/load bit-exactly."""
+    spec = _faulted(SPEC_BUF, edge_p_kill=0.2, uplink_p_loss=0.2)
+    state, bundle, _ = engine.init_simulation(SMALL, seed=0)
+    state = engine.ensure_carry(SMALL, spec, state)
+    # run a few micro-steps so every leaf holds non-init values
+    state, _ = engine.run_scanned(SMALL, spec, state, bundle, 3)
+    store.save_checkpoint(str(tmp_path), 3, {"carry": state})
+    tree, step, _ = store.load_checkpoint(str(tmp_path), {"carry": state})
+    assert step == 3
+    _tree_equal(tree["carry"], state, "carry round-trip")
+    # the restored key is a TYPED key again, usable for new draws
+    restored = tree["carry"].key
+    assert jax.dtypes.issubdtype(restored.dtype, jax.dtypes.prng_key)
+    _tree_equal(jax.random.split(restored, 2), jax.random.split(state.key, 2),
+                "restored key draws diverge")
+
+
+def test_latest_step_empty_and_garbage_dirs(tmp_path):
+    assert store.latest_step(str(tmp_path / "never_created")) is None
+    assert store.latest_step(str(tmp_path)) is None          # empty
+    (tmp_path / "not_a_checkpoint.npz").write_bytes(b"junk")
+    (tmp_path / "step_x.npz").write_bytes(b"junk")
+    (tmp_path / "step_7.json").write_text("{}")              # manifest only
+    assert store.latest_step(str(tmp_path)) is None
+    (tmp_path / "step_4.npz").write_bytes(b"junk")
+    (tmp_path / "step_11.npz").write_bytes(b"junk")
+    assert store.latest_step(str(tmp_path)) == 11
+
+
+def test_resumable_interrupted_run_resumes_bit_identical(tmp_path):
+    """A mid-run interruption (max_segments=1) + resume reproduces the
+    uninterrupted scan bit-for-bit: metrics, trace AND the final carry
+    (typed PRNG key included)."""
+    spec = dataclasses.replace(
+        _faulted(SPEC_BUF, edge_p_kill=0.2, edge_p_respawn=0.5,
+                 uplink_p_loss=0.2, uplink_loss_slope=0.2),
+        telemetry=True)
+    state, bundle, _ = engine.init_simulation(SMALL, seed=0)
+    state = engine.ensure_carry(SMALL, spec, state)
+    n_rounds = 6
+
+    # the uninterrupted reference: one scan over all rounds
+    ref_final, out = engine.run_scanned(SMALL, spec, state, bundle, n_rounds)
+    ref_ms, ref_tr = engine.split_output(spec, out)
+
+    # segment 1, then a simulated host crash, then resume to completion
+    first = run_scanned_resumable(SMALL, spec, state, bundle, n_rounds,
+                                  directory=str(tmp_path),
+                                  segment_rounds=2, max_segments=1)
+    assert first.completed_rounds == 2 and not first.done
+    assert store.latest_step(str(tmp_path)) == 2
+    res = run_scanned_resumable(SMALL, spec, state, bundle, n_rounds,
+                                directory=str(tmp_path), segment_rounds=2)
+    assert res.done and res.completed_rounds == n_rounds
+
+    _tree_equal(ref_ms, res.metrics, "metrics diverged across resume")
+    _tree_equal(ref_tr, res.trace, "trace diverged across resume")
+    _tree_equal(ref_final, res.state, "final carry diverged across resume")
+
+
+def test_resumable_without_interruption_matches_scan(tmp_path):
+    """Sanity: segmented-but-uninterrupted == one scan (no faults, no
+    telemetry — the plain sync engine through the same driver)."""
+    state, bundle, _ = engine.init_simulation(SMALL, seed=0)
+    ref_final, ref_ms = engine.run_scanned(SMALL, SPEC_SYNC, state, bundle,
+                                           ROUNDS)
+    res = run_scanned_resumable(SMALL, SPEC_SYNC, state, bundle, ROUNDS,
+                                directory=str(tmp_path), segment_rounds=3)
+    assert res.done and res.trace is None
+    _tree_equal(ref_ms, res.metrics, "metrics")
+    _tree_equal(ref_final, res.state, "final carry")
+
+
+# -- (e) the chaos sweep axis ------------------------------------------------
+
+@pytest.mark.slow
+def test_sweep_grid_chaos_cells(tmp_path):
+    from repro.sweeps import grid as sweeps_grid
+    g = sweeps_grid.SweepGrid(
+        name="chaos_t", scenarios=("static",), policies=("gcea",),
+        seeds=(0,), n_rounds=2, telemetry=True,
+        engine_modes=("buffered",),
+        faults=FaultSpec(edge_p_kill=0.2, edge_p_respawn=0.5,
+                         uplink_p_loss=0.1, uplink_loss_slope=0.2))
+    summary = sweeps_grid.run_sweep(SMALL, g, out_dir=str(tmp_path))
+    assert summary["failed_cells"] == {}
+    assert len(summary["final"]) == 1
+    (cell,) = summary["final"].values()
+    assert np.isfinite(cell["loss"])
+    # the chaos cell persisted its RoundTrace with the fault leaves
+    tdir = tmp_path / "sweep_chaos_t"
+    traces = list(tdir.glob("*.trace.json"))
+    assert len(traces) == 1
+    tr = json.loads(traces[0].read_text())["trace"]
+    for leaf in ("dead_edges", "uplink_retries", "quarantined"):
+        assert leaf in tr and len(tr[leaf]) == 2
+
+
+def test_sweep_isolates_a_crashed_group(tmp_path, monkeypatch):
+    """A group that raises lands in summary['failed_cells'] (one entry
+    per member cell) without aborting the sweep."""
+    from repro.sweeps import grid as sweeps_grid
+
+    def boom(*a, **k):
+        raise RuntimeError("chaos cell diverged")
+
+    monkeypatch.setattr(engine, "run_fleet", boom)
+    g = sweeps_grid.SweepGrid(name="crash_t", scenarios=("static",),
+                              policies=("gcea",), seeds=(0, 1), n_rounds=2)
+    summary = sweeps_grid.run_sweep(SMALL, g, out_dir=str(tmp_path),
+                                    write_json=False)
+    assert summary["final"] == {}
+    assert len(summary["failed_cells"]) == 2
+    assert all("chaos cell diverged" in v
+               for v in summary["failed_cells"].values())
+    assert any("error" in t for t in summary["groups"])

@@ -35,7 +35,9 @@ ROUNDS = 4
 
 INT_LEAVES = {"round", "assoc_sweeps", "edge_load", "pdd_iters",
               "sic_depth", "stale_hist", "buffer_fill", "trigger_cause",
-              "tier_active", "tier_occupancy"}
+              "tier_active", "tier_occupancy", "dead_edges",
+              "orphaned_clients", "uplink_retries", "uplink_dropped",
+              "quarantined"}
 
 
 def _leaf_shapes(m):
