@@ -29,6 +29,13 @@ refactor: the dense resolver still runs there but materially slower (its
 sweeps drag (N, M) tensors and an (M, N) rank scatter through every
 while_loop step).
 
+Every size also records a TRAIN_IMPL A/B (``train_impl_ab``): the
+batched-GEMM cohort step vs the per-client vmap reference, train stage
+alone — the PR-10 fused-training acceptance column — and the 1024×16
+rung adds a WARM_SWEEPS block (cold vs warm-started deferred-acceptance
+sweep medians under ``random_waypoint`` — an honest negative at this
+scale, see ``warm_sweeps_ab`` and DESIGN.md §13.4).
+
 The model/data are kept small so the numbers measure the ROUND pipeline,
 not the MLP.  Writes BENCH_rounds.json at the repo root so the perf
 trajectory is tracked across PRs.
@@ -240,6 +247,51 @@ def stage_breakdown(cfg, state, bundle, spec=SPEC) -> Dict[str, float]:
     }
 
 
+def train_stage_ms(cfg, state, bundle, spec=SPEC) -> float:
+    """Median ms of the jitted train stage alone — the hot stage once
+    association went candidate-compact (DESIGN.md §13), and the number
+    ``check_regress`` gates per-stage so association noise can't hide a
+    training regression in the aggregate rps."""
+    model = MLPClassifier(cfg.input_dim, cfg.hidden, cfg.n_classes)
+    _, _, _, k_assoc, _, k_train = engine.round_keys(spec, state.key)
+    assoc = jax.jit(lambda g, s: engine._associate(
+        cfg, spec, k_assoc, g, bundle.dist, bundle.counts, s, None,
+        None).astype(jnp.float32))(state.gains, state.staleness)
+    z1 = jnp.ones((cfg.n_edges,))
+    f_train = jax.jit(lambda st, a: engine._train(cfg, spec, model, k_train,
+                                                  st, bundle, a, z1))
+    return median_ms(f_train, state, assoc)
+
+
+def warm_sweeps_ab(n: int, m: int, *, rounds: int) -> Dict[str, float]:
+    """Cold vs warm-started deferred-acceptance sweep counts under
+    ``random_waypoint`` mobility (DESIGN.md §13.4), read off the in-scan
+    ``RoundTrace.assoc_sweeps`` leaf.  Round 0 has no seed either way, so
+    the medians are over rounds 1..R-1.
+
+    NB this records an honest NEGATIVE result at bench scale: the market
+    is oversubscribed enough that fading + motion leave a blocking pair
+    in yesterday's matching almost every round, so the exactness guard
+    bills seeded-fixpoint + cold-rerun and ``median_reduction`` comes
+    out negative (see DESIGN.md §13.4 for the analysis; the warm win is
+    pinned at the 16×2 test scale in tests/test_train_impl.py)."""
+    cfg = _cfg(n, m)
+    sspec = scenarios.preset("random_waypoint")
+    state, bundle, _ = engine.init_simulation(cfg, seed=0, scenario=sspec)
+    out: Dict[str, float] = {"rounds": rounds}
+    for name, warm in (("cold", False), ("warm", True)):
+        sp = dataclasses.replace(SPEC, scenario=sspec.engine_kind(),
+                                 telemetry=True, warm_start=warm)
+        _, (_, tr) = jax.block_until_ready(
+            engine.run_scanned(cfg, sp, state, bundle, rounds))
+        sw = np.asarray(tr.assoc_sweeps)[1:]
+        out[f"{name}_median_sweeps"] = float(np.median(sw))
+        out[f"{name}_mean_sweeps"] = round(float(sw.mean()), 2)
+    out["median_reduction"] = round(
+        out["cold_median_sweeps"] - out["warm_median_sweeps"], 1)
+    return out
+
+
 def bench_size(n: int, m: int, *, eager_rounds: int, scan_rounds: int,
                fleet_seeds: int, with_eager: bool = True,
                with_fleet: bool = True) -> Dict[str, float]:
@@ -321,6 +373,14 @@ def bench_size(n: int, m: int, *, eager_rounds: int, scan_rounds: int,
                scan_rounds=scan_rounds,
                fleet_seeds=fleet_seeds if with_fleet else 0,
                stages=stage_breakdown(cfg, state, bundle))
+
+    # -- train_impl A/B (DESIGN.md §13): the batched-GEMM cohort step vs
+    #    the per-client vmap reference, train stage alone
+    out["train_impl_ab"] = {
+        impl: round(train_stage_ms(
+            cfg, state, bundle,
+            dataclasses.replace(SPEC, train_impl=impl)), 3)
+        for impl in ("batched", "vmap")}
 
     # -- candidate-frontier K-sweep vs the dense column above ----------------
     for k in K_SWEEP.get((n, m), ()):
@@ -422,6 +482,12 @@ def main(argv=None) -> None:
         emit(f"async_ab_{scen}_n{n}_m{m}",
              1e6 / max(ab[scen]["buffered_virtual_rps"], 1e-9), ab[scen])
     results["async_ab"] = {"size": f"{n}x{m}", **ab}
+
+    # -- warm-started association A/B (DESIGN.md §13.4) ---------------------
+    ws = warm_sweeps_ab(n, m, rounds=8 if args.quick else 16)
+    emit(f"warm_sweeps_n{n}_m{m}",
+         ws["warm_median_sweeps"] * 1e3, ws)
+    results["warm_sweeps"] = {"size": f"{n}x{m}", **ws}
 
     with open(OUT, "w") as fh:
         json.dump({"spec": dataclasses.asdict(SPEC),

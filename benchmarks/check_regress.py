@@ -9,6 +9,10 @@ compares each size's rounds/sec against the ``scanned_rps`` /
 
     fresh_rps < committed_rps * (1 - tol/100)
 
+The train stage is additionally gated per-stage (``stages.train_ms``,
+direction flipped since lower ms is better): a training-stage regression
+fails CI even when association noise hides it in the aggregate rps.
+
 and any regression exits non-zero — the CI perf-smoke step.  Faster is
 never a failure (an improved number just means the baseline should be
 re-recorded by ``bench_rounds``).
@@ -103,6 +107,37 @@ def check(bench_path: str = BENCH, tol_pct: float = 30.0,
             print(f"{key} {col}: fresh {fresh:.2f} rps vs committed "
                   f"{base:.2f} (floor {floor:.2f}) -> "
                   f"{report['sizes'][key][col]['status']}", flush=True)
+
+        # per-stage train gate (DESIGN.md §13): training is the hot stage
+        # post-candidate-frontier, and association noise can hide a train
+        # regression inside the aggregate rps — so its ms is gated
+        # directly.  Lower is better here, so the failure direction flips:
+        # fresh_ms > committed_ms * (1 + tol/100) regresses.
+        base_ms = row.get("stages", {}).get("train_ms")
+        if base_ms is None:
+            print(f"WARNING: {key} stages.train_ms: committed baseline "
+                  f"has no such column — skipping (re-record with "
+                  f"bench_rounds to gate it)", flush=True)
+            report["sizes"][key]["train_ms"] = {"status": "no-baseline"}
+        else:
+            cfg = bench_rounds._cfg(n, m)
+            state, bundle, _ = engine.init_simulation(cfg, seed=0)
+            fresh_ms = bench_rounds.train_stage_ms(cfg, state, bundle)
+            ceil = base_ms * (1.0 + tol_pct / 100.0)
+            ok = fresh_ms <= ceil
+            report["sizes"][key]["train_ms"] = {
+                "committed_ms": base_ms,
+                "fresh_ms": round(fresh_ms, 3),
+                "ceil_ms": round(ceil, 3),
+                "ratio": round(fresh_ms / max(base_ms, 1e-9), 3),
+                "status": "ok" if ok else "REGRESSED",
+            }
+            if not ok:
+                report["regressed"].append(f"{key}:train_ms")
+            print(f"{key} train_ms: fresh {fresh_ms:.2f} ms vs committed "
+                  f"{base_ms:.2f} (ceil {ceil:.2f}) -> "
+                  f"{report['sizes'][key]['train_ms']['status']}",
+                  flush=True)
     report["ok"] = not report["regressed"]
     return report
 

@@ -198,9 +198,37 @@ def resolve_jax(order: jnp.ndarray, dist: jnp.ndarray, quota: int,
     return assoc
 
 
+def _blocking_pair_dense(assigned: jnp.ndarray, rank: jnp.ndarray,
+                         dist: jnp.ndarray, coverage: jnp.ndarray,
+                         quota: int) -> jnp.ndarray:
+    """Does ``assigned`` (N,) admit a blocking pair under TODAY's market?
+
+    Pair (c, m) blocks when the EDGE wants c — in coverage, not already
+    held, and either m has a free slot or ranks c above its worst-held
+    client — AND the CLIENT wants m: unmatched, or m beats its current
+    edge by the strict (distance, edge-index) order.  A matching with no
+    blocking pair is stable; the cold resolver's result never has one
+    (deferred acceptance), so this is the warm path's acceptance test
+    (DESIGN.md §13.4)."""
+    m_edges, n = rank.shape
+    col = jnp.arange(m_edges, dtype=jnp.int32)
+    held = assigned[None, :] == col[:, None]                   # (M, N)
+    deficit = quota - jnp.sum(held, axis=1)                    # (M,)
+    worst = jnp.max(jnp.where(held, rank, -1), axis=1)         # (M,)
+    edge_wants = coverage.T & (~held) & \
+        ((deficit > 0)[:, None] | (rank < worst[:, None]))
+    cur = assigned
+    cur_dist = jnp.take_along_axis(dist, jnp.maximum(cur, 0)[:, None],
+                                   axis=1)[:, 0]
+    nearer = (dist < cur_dist[:, None]) | \
+        ((dist == cur_dist[:, None]) & (col[None, :] < cur[:, None]))
+    client_wants = (cur < 0)[:, None] | nearer                 # (N, M)
+    return jnp.any(edge_wants & client_wants.T)
+
+
 def resolve_parallel(order: jnp.ndarray, dist: jnp.ndarray, quota: int,
-                     coverage: jnp.ndarray, return_sweeps: bool = False
-                     ) -> jnp.ndarray:
+                     coverage: jnp.ndarray, return_sweeps: bool = False,
+                     seed: jnp.ndarray | None = None) -> jnp.ndarray:
     """Vectorized quota-round resolver — the default inside ``round_step``.
 
     One *sweep* plays a whole batch of deferred-acceptance proposals:
@@ -225,6 +253,19 @@ def resolve_parallel(order: jnp.ndarray, dist: jnp.ndarray, quota: int,
     order: (M, N) int — per-edge client indices by descending preference.
     Returns assoc (N, M) one-hot int32; with ``return_sweeps`` also the
     sweep count from the while state (free — no extra compute).
+
+    ``seed`` (N,) int32 — a previous round's assigned vector — WARM-STARTS
+    the sweeps (DESIGN.md §13.4): still-in-coverage seeds become the
+    initial tentative holds (a previous matching holds ≤ quota per edge,
+    and coverage loss only shrinks it, so seeded holds never violate
+    quotas), the UNCHANGED sweep loop runs to its fixed point, and the
+    result is kept only if it has no blocking pair — otherwise one cold
+    resolution runs from scratch (``lax.cond``, so only the taken branch
+    executes).  The warm result is therefore always a stable matching of
+    today's market; it equals the cold (edge-optimal) matching whenever
+    the stable matching is unique — and the fallback fires on every
+    detectable divergence.  ``seed=None`` (the default) is bit-identical
+    to the pre-warm resolver.
     """
     m_edges, n_clients = order.shape
     # rank[m, c] = position of client c in edge m's queue: the inverse
@@ -268,20 +309,60 @@ def resolve_parallel(order: jnp.ndarray, dist: jnp.ndarray, quota: int,
         rejected = rejected | (cand & (col[None, :] != best[:, None]))
         return assigned, rejected, ~jnp.any(propose), it + 1
 
-    state = (jnp.full((n_clients,), -1, jnp.int32), ~coverage,
-             jnp.asarray(False), jnp.asarray(0, jnp.int32))
-    final = jax.lax.while_loop(cond, body, state)
-    taken = final[0]
+    def run(assigned0):
+        state = (assigned0, ~coverage, jnp.asarray(False),
+                 jnp.asarray(0, jnp.int32))
+        final = jax.lax.while_loop(cond, body, state)
+        return final[0], final[3]
+
+    cold0 = jnp.full((n_clients,), -1, jnp.int32)
+    if seed is None:
+        taken, sweeps = run(cold0)
+    else:
+        ok = (seed >= 0) & jnp.take_along_axis(
+            coverage, jnp.maximum(seed, 0)[:, None], axis=1)[:, 0]
+        taken_w, sweeps_w = run(jnp.where(ok, seed.astype(jnp.int32), -1))
+        taken, extra = jax.lax.cond(
+            _blocking_pair_dense(taken_w, rank, dist, coverage, quota),
+            lambda: run(cold0),
+            lambda: (taken_w, jnp.asarray(0, jnp.int32)))
+        sweeps = sweeps_w + extra
     assoc = ((taken[:, None] == col[None, :]) &
              (taken[:, None] >= 0)).astype(jnp.int32)
     if return_sweeps:
-        return assoc, final[3]
+        return assoc, sweeps
     return assoc
 
 
+def _blocking_pair_frontier(assigned: jnp.ndarray, idx: jnp.ndarray,
+                            valid: jnp.ndarray, inv: jnp.ndarray,
+                            quota: int, n_edges: int) -> jnp.ndarray:
+    """``_blocking_pair_dense`` on the (N, K) frontier: pair ranks come
+    from the resolver's global (edge asc, score desc) rank order ``inv``
+    (compared only within one edge's segment), and the CLIENT side is the
+    slot order itself — frontier rows are (distance, edge)-sorted, so
+    client c strictly prefers slot j to its held slot hj iff j < hj."""
+    n, k = idx.shape
+    flat_e = idx.reshape(-1)
+    held = (assigned[:, None] == idx) & (assigned >= 0)[:, None] & valid
+    held_f = held.reshape(-1)
+    filled = jnp.zeros((n_edges,), jnp.int32).at[flat_e].add(
+        held_f.astype(jnp.int32))
+    worst = jnp.full((n_edges,), -1, jnp.int32).at[flat_e].max(
+        jnp.where(held_f, inv, -1))
+    pair_rank = inv.reshape(n, k)
+    edge_wants = valid & (~held) & \
+        (((quota - filled) > 0)[idx] | (pair_rank < worst[idx]))
+    col_k = jnp.arange(k, dtype=jnp.int32)
+    held_slot = jnp.min(jnp.where(held, col_k[None, :],
+                                  jnp.asarray(k, jnp.int32)), axis=1)
+    client_wants = col_k[None, :] < held_slot[:, None]         # (N, K)
+    return jnp.any(edge_wants & client_wants)
+
+
 def resolve_candidates(pref: jnp.ndarray, cand, quota: int,
-                       n_edges: int, return_sweeps: bool = False
-                       ) -> jnp.ndarray:
+                       n_edges: int, return_sweeps: bool = False,
+                       seed: jnp.ndarray | None = None) -> jnp.ndarray:
     """``resolve_parallel`` re-expressed over the (N, K) candidate frontier
     (DESIGN.md §9): the same batched deferred-acceptance sweeps, with every
     per-sweep tensor O(N·K) instead of O(N·M) and the per-edge proposal
@@ -306,6 +387,11 @@ def resolve_candidates(pref: jnp.ndarray, cand, quota: int,
     ``build_candidates`` guarantees it.
     Returns assigned (N,) int32 — edge index or −1; with ``return_sweeps``
     also the sweep count from the while state.
+
+    ``seed`` warm-starts the sweeps exactly like ``resolve_parallel``'s:
+    seeds whose edge still sits on the client's VALID frontier become the
+    initial holds, the unchanged loop runs, and a blocking-pair check
+    (``_blocking_pair_frontier``) gates a cold-restart fallback.
     """
     idx, valid, dist = cand.idx, cand.valid, cand.dist
     n, k = idx.shape
@@ -361,18 +447,32 @@ def resolve_candidates(pref: jnp.ndarray, cand, quota: int,
         rejected = rejected | (offer & (col_k[None, :] != best[:, None]))
         return assigned, rejected, ~jnp.any(propose), it + 1
 
-    state = (jnp.full((n,), -1, jnp.int32), ~valid,
-             jnp.asarray(False), jnp.asarray(0, jnp.int32))
-    final = jax.lax.while_loop(cond, body, state)
-    if return_sweeps:
+    def run(assigned0):
+        state = (assigned0, ~valid, jnp.asarray(False),
+                 jnp.asarray(0, jnp.int32))
+        final = jax.lax.while_loop(cond, body, state)
         return final[0], final[3]
-    return final[0]
+
+    cold0 = jnp.full((n,), -1, jnp.int32)
+    if seed is None:
+        assigned, sweeps = run(cold0)
+    else:
+        ok = (seed >= 0) & jnp.any((idx == seed[:, None]) & valid, axis=1)
+        a_w, sweeps_w = run(jnp.where(ok, seed.astype(jnp.int32), -1))
+        assigned, extra = jax.lax.cond(
+            _blocking_pair_frontier(a_w, idx, valid, inv, quota, n_edges),
+            lambda: run(cold0),
+            lambda: (a_w, jnp.asarray(0, jnp.int32)))
+        sweeps = sweeps_w + extra
+    if return_sweeps:
+        return assigned, sweeps
+    return assigned
 
 
 def associate_candidates(policy: str, *, scores: jnp.ndarray | None,
                          gains: jnp.ndarray, cand, quota: int, key,
-                         n_edges: int,
-                         return_sweeps: bool = False) -> jnp.ndarray:
+                         n_edges: int, return_sweeps: bool = False,
+                         seed: jnp.ndarray | None = None) -> jnp.ndarray:
     """Candidate-frontier association (DESIGN.md §9): the (N, K) analogue
     of ``associate_jax``, returning the compact assigned vector (N,).
 
@@ -401,7 +501,7 @@ def associate_candidates(policy: str, *, scores: jnp.ndarray | None,
     else:
         raise ValueError(f"unknown association policy {policy!r}")
     return resolve_candidates(pref, cand, quota, n_edges,
-                              return_sweeps=return_sweeps)
+                              return_sweeps=return_sweeps, seed=seed)
 
 
 RESOLVERS: Dict[str, Callable[..., jnp.ndarray]] = {
@@ -426,7 +526,8 @@ def associate_jax(policy: str, *, scores: jnp.ndarray | None,
                   coverage_radius_m: float, key,
                   avail: jnp.ndarray | None = None,
                   resolver: str = "parallel",
-                  return_sweeps: bool = False) -> jnp.ndarray:
+                  return_sweeps: bool = False,
+                  seed: jnp.ndarray | None = None) -> jnp.ndarray:
     """JAX-native association (N, M) one-hot; pure, jit/vmap-safe.
 
     ``avail`` (N,) is the scenario availability mask (DESIGN.md §6): an
@@ -449,6 +550,13 @@ def associate_jax(policy: str, *, scores: jnp.ndarray | None,
         coverage = coverage & (avail > 0)[:, None]
     pref = jnp.where(coverage, pref, -jnp.inf)
     order = jnp.argsort(-pref, axis=0).T                       # (M, N)
+    if seed is not None:
+        if resolver != "parallel":
+            raise ValueError("warm-start seeding needs the 'parallel' "
+                             "resolver (the serial legacy loop has no "
+                             "seeded-hold start)")
+        return resolve_parallel(order, dist, quota, coverage,
+                                return_sweeps=return_sweeps, seed=seed)
     return RESOLVERS[resolver](order, dist, quota, coverage,
                                return_sweeps=return_sweeps)
 

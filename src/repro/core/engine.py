@@ -44,6 +44,7 @@ from repro.data import federated
 from repro.faults import guard as fault_guard
 from repro.faults import inject as fault_inject
 from repro.faults.spec import FaultSpec, FaultState, init_faults
+from repro.models import layers
 from repro.models.mlp import MLPClassifier
 from repro import scenarios
 from repro.scenarios import ScenarioSpec, ScenarioState
@@ -119,6 +120,28 @@ class EngineSpec:
     # uplink loss with retry/backoff (buffered mode), mid-round crashes,
     # delta poisoning, and the update-quarantine guard.
     faults: Optional[FaultSpec] = None
+    # training-stage implementation (DESIGN.md §13): how the admitted
+    # cohort's τ₂·τ₁ local-SGD steps are computed.  Every impl consumes
+    # the SAME fold_in minibatch-index lattice (``_batch_index_lattice``),
+    # so they all optimise the same update stream:
+    # * "batched" — ONE ``lax.scan`` over τ₁ whose body is a
+    #   (K, B, D)-batched GEMM step over the stacked cohort (what "auto"
+    #   resolves to — the fastest CPU/TPU XLA path);
+    # * "vmap"    — the per-client τ₁ scan vmapped over the cohort (the
+    #   reference the bit-parity tests pin "batched" against);
+    # * "pallas"  — the fused ``kernels.hfl_ops.local_sgd_step`` kernel
+    #   holding one client block's params + activations in VMEM across
+    #   the τ₁ steps (interpret-mode on CPU; opt-in pending the ROADMAP's
+    #   TPU validation, like ``pallas_score``/``sic_impl="pallas"``).
+    train_impl: str = "auto"        # auto | batched | vmap | pallas
+    # warm-started association (DESIGN.md §13.4): carry the previous
+    # round's assigned vector in ``RoundState.warm`` and seed the
+    # deferred-acceptance sweeps from it — under mobility the seed is
+    # nearly stable, so the resolver converges in a sweep or two, with a
+    # blocking-pair check + cold-resolver fallback guarding exactness.
+    # Off (the default) the warm leaf is STRUCTURALLY absent and no seed
+    # reaches the resolver: the cold program is bit-identical.
+    warm_start: bool = False
 
 
 class RoundBundle(NamedTuple):
@@ -163,6 +186,7 @@ class RoundState(NamedTuple):
     scenario: ScenarioState  # per-round world state (DESIGN.md §6)
     buffer: Any = None       # BufferState | None (DESIGN.md §11)
     faults: Any = None       # FaultState | None (DESIGN.md §12)
+    warm: Any = None         # (N,) int32 prev assigned | None (§13.4)
 
 
 class RoundMetrics(NamedTuple):
@@ -283,10 +307,34 @@ def ensure_faults(cfg, spec: EngineSpec, state: "RoundState") -> "RoundState":
     return state
 
 
+def init_warm(cfg) -> jnp.ndarray:
+    """A fresh warm-start seed: every client unassigned (−1), so the first
+    warm round degenerates to the cold resolver's empty start."""
+    return jnp.full((cfg.n_clients,), -1, jnp.int32)
+
+
+def ensure_warm(cfg, spec: EngineSpec, state: "RoundState") -> "RoundState":
+    """Normalise ``state.warm`` to the spec: attach the unassigned seed
+    when ``spec.warm_start`` is on (keeping one already there, e.g.
+    mid-scan or restored from a checkpoint), strip it when off so the
+    cold carry — and with it every golden program — stays structurally
+    identical to the pre-warm engine.  Same pytree-STRUCTURE check as
+    ``ensure_buffer``/``ensure_faults``: trace-time static, jit-safe."""
+    if spec.warm_start:
+        if state.warm is None:
+            return state._replace(warm=init_warm(cfg))
+        return state
+    if state.warm is not None:
+        return state._replace(warm=None)
+    return state
+
+
 def ensure_carry(cfg, spec: EngineSpec, state: "RoundState") -> "RoundState":
     """Normalise the FULL scan carry to the spec's optional subsystems
-    (aggregation buffer + fault state) — the one entry point drivers use."""
-    return ensure_faults(cfg, spec, ensure_buffer(cfg, spec, state))
+    (aggregation buffer + fault state + warm-association seed) — the one
+    entry point drivers use."""
+    return ensure_warm(
+        cfg, spec, ensure_faults(cfg, spec, ensure_buffer(cfg, spec, state)))
 
 
 # ---------------------------------------------------------------------------
@@ -354,7 +402,12 @@ def stack_fleet(states_and_bundles) -> Tuple[RoundState, RoundBundle]:
 # ---------------------------------------------------------------------------
 
 def _local_sgd(model: MLPClassifier, lr: float, tau1: int, batch_size: int):
-    """(params_N, x_N, y_N, count_N, key_N) -> params_N, vmapped over N."""
+    """(params_N, x_N, y_N, count_N, key_N) -> params_N, vmapped over N.
+
+    The LEGACY per-client split-per-step stream, kept for the eager
+    baseline simulator (benchmarks/bench_rounds.LegacyEagerSim) — the
+    round engine itself draws from the ``_batch_index_lattice`` stream
+    (DESIGN.md §13.2)."""
 
     def one_client(params, x, y, count, key):
         def step(carry, k):
@@ -373,10 +426,121 @@ def _local_sgd(model: MLPClassifier, lr: float, tau1: int, batch_size: int):
     return jax.vmap(one_client)
 
 
+def _batch_index_lattice(key, tau2: int, tau1: int, gid: jnp.ndarray,
+                         counts: jnp.ndarray, batch_size: int) -> jnp.ndarray:
+    """Every minibatch index of the round in ONE batched draw
+    (DESIGN.md §13.2): the key for (edge-iteration t, local step i,
+    client c) is ``fold_in(fold_in(split(key, τ₂)[t], i), c)`` with ``c``
+    the client's GLOBAL index.
+
+    One outer split + a fold_in lattice replaces the nested per-iteration
+    ``jax.random.split`` calls of the legacy stream — no O(N) key fan-out
+    inside the scan, and the drawn index stream is a pure function of
+    (round key, t, i, global id): identical between the dense and
+    gathered cohort paths, identical across every ``train_impl``, and
+    independent of which OTHER clients were admitted.  Pad lanes repeat a
+    real client's id (their draws are discarded with the lane).
+
+    gid/counts: (K,) global ids + per-lane sample counts.
+    Returns idx (τ₂, τ₁, K, B) int32 into each lane's data buffer.
+    """
+    k_t = jax.random.split(key, tau2)
+    hi = jnp.maximum(counts, 1)
+
+    def one(kt, i, c, cnt):
+        kc = jax.random.fold_in(jax.random.fold_in(kt, i), c)
+        return jax.random.randint(kc, (batch_size,), 0, cnt)
+
+    per_c = jax.vmap(one, in_axes=(None, None, 0, 0))
+    per_i = jax.vmap(per_c, in_axes=(None, 0, None, None))
+    per_t = jax.vmap(per_i, in_axes=(0, None, None, None))
+    return per_t(k_t, jnp.arange(tau1, dtype=jnp.int32), gid, hi)
+
+
+def _train_impl_for(spec: EngineSpec) -> str:
+    """Resolve the static training-impl switch ("auto" → "batched")."""
+    impl = "batched" if spec.train_impl == "auto" else spec.train_impl
+    if impl not in ("batched", "vmap", "pallas"):
+        raise ValueError(f"unknown train_impl {spec.train_impl!r}; choose "
+                         f"'auto', 'batched', 'vmap' or 'pallas'")
+    return impl
+
+
+def _cohort_fit(model: MLPClassifier, lr: float, impl: str):
+    """One edge-iteration of τ₁ local-SGD steps over the stacked K-lane
+    cohort: ``fit(params_K, x_K, y_K, idx) -> params_K`` with ``idx``
+    (τ₁, K, B) pre-drawn minibatch indices from the lattice.
+
+    The three impls compute the same update stream (same indices, same
+    math — DESIGN.md §13.1):
+
+    * "batched": ONE ``lax.scan`` over τ₁ whose body gathers the (K, B)
+      minibatch and takes a (K, B, D)-batched GEMM gradient step — the
+      einsum contractions lower to batched ``dot_general``, so XLA fuses
+      the whole cohort step instead of K small matmuls;
+    * "vmap": the per-client τ₁ scan vmapped over lanes — the reference
+      formulation (scan-of-batched-body and vmap-of-scan commute in XLA,
+      so the two are bit-identical; tests/test_train_impl.py pins it);
+    * "pallas": the fused VMEM-resident kernel (minibatches pre-gathered
+      host-side to (τ₁, K, B, D) — the kernel never touches the (K, cap)
+      data buffers).
+    """
+    if impl == "pallas":
+        from repro.kernels import hfl_ops            # cycle-free lazy import
+
+        def fit_pallas(params, x, y, idx):
+            bx = jax.vmap(lambda ix: jnp.take_along_axis(
+                x, ix[:, :, None], axis=1))(idx)     # (tau1, K, B, D)
+            by = jax.vmap(lambda ix: jnp.take_along_axis(y, ix, axis=1))(
+                idx)                                 # (tau1, K, B)
+            return hfl_ops.local_sgd_step(params, bx, by, lr=lr)
+
+        return fit_pallas
+
+    if impl == "vmap":
+        def one_client(params, x, y, ixs):           # ixs (tau1, B)
+            def step(p, ix):
+                g = jax.grad(model.loss)(p, (x[ix], y[ix]))
+                return jax.tree.map(lambda w, gw: w - lr * gw, p, g), None
+
+            params, _ = jax.lax.scan(step, params, ixs)
+            return params
+
+        def fit_vmap(params, x, y, idx):
+            return jax.vmap(one_client, in_axes=(0, 0, 0, 1))(
+                params, x, y, idx)
+
+        return fit_vmap
+
+    def cohort_loss(p, bx, by):
+        # forward as (K, B, D)-batched contractions (batched dot_general)
+        h = jax.nn.relu(jnp.einsum("kbd,kdh->kbh", bx, p["w1"])
+                        + p["b1"][:, None, :])
+        h = jax.nn.relu(jnp.einsum("kbh,khj->kbj", h, p["w2"])
+                        + p["b2"][:, None, :])
+        logits = jnp.einsum("kbh,khv->kbv", h, p["w3"]) + p["b3"][:, None, :]
+        # per-lane mean CE summed over lanes: the gradient w.r.t. lane
+        # k's params is exactly that lane's own Eq. 11 loss gradient
+        return jnp.sum(jax.vmap(layers.softmax_cross_entropy)(logits, by))
+
+    def fit_batched(params, x, y, idx):
+        def step(p, ix):                             # ix (K, B)
+            bx = jnp.take_along_axis(x, ix[:, :, None], axis=1)
+            by = jnp.take_along_axis(y, ix, axis=1)
+            g = jax.grad(cohort_loss)(p, bx, by)
+            return jax.tree.map(lambda w, gw: w - lr * gw, p, g), None
+
+        params, _ = jax.lax.scan(step, params, idx)
+        return params
+
+    return fit_batched
+
+
 def _associate(cfg, spec: EngineSpec, key, gains, dist, counts, stale,
                avail: Optional[jnp.ndarray] = None,
                cand: Optional[CandidateSet] = None,
-               with_sweeps: bool = False) -> jnp.ndarray:
+               with_sweeps: bool = False,
+               seed: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Association, fully in JAX.  ``avail`` (N,) masks unavailable
     clients out of coverage (scenario dropout).
 
@@ -409,12 +573,25 @@ def _associate(cfg, spec: EngineSpec, key, gains, dist, counts, stale,
         return association.associate_candidates(
             spec.policy, scores=scores, gains=gains, cand=cand,
             quota=quota_for(cfg, spec), key=key, n_edges=cfg.n_edges,
-            return_sweeps=with_sweeps)
+            return_sweeps=with_sweeps, seed=seed)
     return association.associate_jax(
         spec.policy, scores=scores, gains=gains, dist=dist,
         quota=quota_for(cfg, spec),
         coverage_radius_m=coverage_radius(cfg), key=key, avail=avail,
-        resolver=spec.resolver, return_sweeps=with_sweeps)
+        resolver=spec.resolver, return_sweeps=with_sweeps, seed=seed)
+
+
+def _next_warm(spec: EngineSpec, assoc, assigned) -> Optional[jnp.ndarray]:
+    """The warm seed the NEXT round's resolver starts from: this round's
+    assigned vector (N,) int32, or None with warm-start off (the leaf —
+    and every op deriving it — stays structurally absent)."""
+    if not spec.warm_start:
+        return None
+    if assigned is not None:              # candidate path: already compact
+        return assigned.astype(jnp.int32)
+    sel = jnp.sum(assoc, axis=1) > 0
+    return jnp.where(sel, jnp.argmax(assoc, axis=1).astype(jnp.int32),
+                     jnp.asarray(-1, jnp.int32))
 
 
 def _build_candidates(cfg, spec: EngineSpec, dist,
@@ -512,7 +689,7 @@ def associate_snapshot(cfg, spec: EngineSpec, state: RoundState,
         dist = fault_inject.masked_dist(dist, edge_up)
     out = _associate(cfg, spec, round_keys(spec, state.key)[3],
                      state.gains, dist, bundle.counts, state.staleness,
-                     avail, cand)
+                     avail, cand, seed=state.warm)
     if cand is not None:      # compact assigned vector -> the (N, M) view
         out = candidates.assigned_one_hot(out, cfg.n_edges)
     return out
@@ -563,59 +740,58 @@ def _train_cohort(cfg, spec: EngineSpec, model: MLPClassifier, key,
     Returns ``(client_params, edge_params)``.
 
     At most ``quota · M`` clients are ever admitted (a static bound), so
-    when that is smaller than N the local-SGD stage gathers the admitted
-    clients into a fixed-size buffer, trains only them, and scatters the
-    results back — bit-identical to training everyone and discarding the
-    unassociated results (each client's PRNG key and data are its own),
-    but O(quota·M) instead of O(N) model work per edge iteration.  At
-    1024×16 with quota 4 that is 16× less training compute; the golden
-    trajectories pin the small-N case where the bound is inactive.
+    the whole stage runs COMPACT (DESIGN.md §13): the admitted clients
+    are gathered ONCE into a fixed K = min(N, quota·M) lane buffer
+    before the scan, every edge iteration trains/aggregates/broadcasts
+    on the (K, …) stack — minibatch indices pre-drawn by the fold_in
+    lattice, model updates as (K, B, D)-batched GEMMs per
+    ``spec.train_impl`` — and the result scatters back ONCE after the
+    scan.  Unadmitted clients keep their params (exactly the old dense
+    semantics); per-iteration work is O(quota·M) with no O(N) key
+    splits, gathers or aggregation einsums left inside the scan.
     """
     counts = bundle.counts
     n = cfg.n_clients
-    selected = jnp.sum(assoc, axis=1) > 0
-    local_fit = _local_sgd(model, cfg.lr, cfg.tau1, cfg.local_batch)
-
     k_sel = min(n, quota_for(cfg, spec) * cfg.n_edges)
-    if k_sel < n:
-        # admitted-client indices, padded with n (dropped on scatter)
-        sel_idx = jnp.nonzero(selected, size=k_sel, fill_value=n)[0]
-        safe = jnp.minimum(sel_idx, n - 1)
-        sel_x, sel_y = bundle.x[safe], bundle.y[safe]
-        sel_counts = counts[safe]
+    selected = jnp.sum(assoc, axis=1) > 0
 
-    # associated clients start from the global model
+    # admitted-lane selection, hoisted OUT of the scan (it only depends on
+    # ``assoc``): indices padded with n (dropped on the final scatter),
+    # clamped for the gathers.  Pad lanes repeat client n−1's data and
+    # draws — they train garbage that carries ZERO aggregation weight
+    # (``lane_ok``) and never scatters back.
+    sel_idx = jnp.nonzero(selected, size=k_sel, fill_value=n)[0]
+    safe = jnp.minimum(sel_idx, n - 1)
+    lane_ok = (sel_idx < n).astype(assoc.dtype)                # (K,)
+    sel_x, sel_y = bundle.x[safe], bundle.y[safe]
+    sel_counts = counts[safe]
+    sel_assoc = assoc[safe] * lane_ok[:, None]                 # (K, M)
+
+    # every τ₂·τ₁ minibatch of the round from ONE batched PRNG draw
+    idx = _batch_index_lattice(key, cfg.tau2, cfg.tau1, safe, sel_counts,
+                               cfg.local_batch)
+    fit = _cohort_fit(model, cfg.lr, _train_impl_for(spec))
+
+    # admitted lanes start from the global model
     edge_params = aggregation.replicate(state.global_params, cfg.n_edges)
-    client_params = aggregation.broadcast_to_clients(
-        None, assoc, edge_params, state.client_params)
+    lane_params = jax.tree.map(lambda l: l[safe], state.client_params)
+    lane_params = aggregation.broadcast_to_clients(
+        None, sel_assoc, edge_params, lane_params)
 
-    def edge_iter(carry, k):
-        client_p, _ = carry
-        ks = jax.random.split(k, cfg.n_clients)
-        if k_sel < n:
-            gathered = jax.tree.map(lambda l: l[safe], client_p)
-            trained = local_fit(gathered, sel_x, sel_y, sel_counts,
-                                ks[safe])
-            # pad lanes target index n -> dropped; real lanes overwrite
-            client_p = jax.tree.map(
-                lambda old, new: old.at[sel_idx].set(new, mode="drop"),
-                client_p, trained)
-        else:
-            trained = local_fit(client_p, bundle.x, bundle.y, counts, ks)
-            # only associated clients actually train (others keep params)
-            client_p = jax.tree.map(
-                lambda new, old: jnp.where(
-                    selected.reshape((-1,) + (1,) * (new.ndim - 1)),
-                    new, old),
-                trained, client_p)
-        edge_p = aggregation.edge_aggregate(client_p, assoc, counts)
-        client_p = aggregation.broadcast_to_clients(None, assoc, edge_p,
-                                                    client_p)
-        return (client_p, edge_p), None
+    def edge_iter(carry, idx_t):
+        lane_p, _ = carry
+        lane_p = fit(lane_p, sel_x, sel_y, idx_t)
+        edge_p = aggregation.edge_aggregate(lane_p, sel_assoc, sel_counts)
+        lane_p = aggregation.broadcast_to_clients(None, sel_assoc, edge_p,
+                                                  lane_p)
+        return (lane_p, edge_p), None
 
-    ks = jax.random.split(key, cfg.tau2)
-    (client_params, edge_params), _ = jax.lax.scan(
-        edge_iter, (client_params, edge_params), ks)
+    (lane_params, edge_params), _ = jax.lax.scan(
+        edge_iter, (lane_params, edge_params), idx)
+    # pad lanes target index n -> dropped; real lanes overwrite
+    client_params = jax.tree.map(
+        lambda old, new: old.at[sel_idx].set(new, mode="drop"),
+        state.client_params, lane_params)
     return client_params, edge_params
 
 
@@ -772,7 +948,8 @@ def _buffered_step(cfg, spec: EngineSpec, state: RoundState,
         if cand is not None:
             out = _associate(cfg, spec, k_assoc, gains, dist,
                              bundle.counts, state.staleness, eligible,
-                             cand, with_sweeps=spec.telemetry)
+                             cand, with_sweeps=spec.telemetry,
+                             seed=state.warm)
             assigned = out
             if spec.telemetry:
                 assigned, sweeps = out
@@ -782,10 +959,11 @@ def _buffered_step(cfg, spec: EngineSpec, state: RoundState,
             assigned = None
             assoc = _associate(cfg, spec, k_assoc, gains, dist_assoc,
                                bundle.counts, state.staleness, eligible,
-                               with_sweeps=spec.telemetry)
+                               with_sweeps=spec.telemetry, seed=state.warm)
             if spec.telemetry:
                 assoc, sweeps = assoc
             assoc = assoc.astype(f32) * eligible[:, None]
+    new_warm = _next_warm(spec, assoc, assigned)
     with _stage("allocate"):
         p, f = _allocate(cfg, spec, k_alloc, assoc, gains, bundle.counts,
                          actor_params, scen if dynamic else None, dist,
@@ -977,7 +1155,8 @@ def _buffered_step(cfg, spec: EngineSpec, state: RoundState,
                                               coverage_radius(cfg), avail),
                     n_retry, n_drop, n_rej)
     new_state = RoundState(global_params, client_params, gains, new_stale,
-                           key, round_idx, scen, new_buf, new_faults)
+                           key, round_idx, scen, new_buf, new_faults,
+                           new_warm)
     if spec.telemetry:
         cause = jnp.where(fired,
                           jnp.where(fill >= fill_target, 1, 2),
@@ -1062,7 +1241,7 @@ def round_step(cfg, spec: EngineSpec, state: RoundState,
         if cand is not None:
             out = _associate(cfg, spec, k_assoc, gains, dist,
                              bundle.counts, state.staleness, avail, cand,
-                             with_sweeps=spec.telemetry)
+                             with_sweeps=spec.telemetry, seed=state.warm)
             assigned = out
             if spec.telemetry:
                 assigned, sweeps = out
@@ -1073,7 +1252,7 @@ def round_step(cfg, spec: EngineSpec, state: RoundState,
             assigned = None
             assoc = _associate(cfg, spec, k_assoc, gains, dist_assoc,
                                bundle.counts, state.staleness, avail,
-                               with_sweeps=spec.telemetry)
+                               with_sweeps=spec.telemetry, seed=state.warm)
             if spec.telemetry:
                 assoc, sweeps = assoc
             assoc = assoc.astype(jnp.float32)
@@ -1082,6 +1261,7 @@ def round_step(cfg, spec: EngineSpec, state: RoundState,
                 # ``avail`` cannot train on, aggregate or bill a dropped
                 # client
                 assoc = assoc * avail[:, None]
+    new_warm = _next_warm(spec, assoc, assigned)
     # 3. resource allocation, clamped to the device class caps
     with _stage("allocate"):
         p, f = _allocate(cfg, spec, k_alloc, assoc, gains, bundle.counts,
@@ -1164,7 +1344,7 @@ def round_step(cfg, spec: EngineSpec, state: RoundState,
                                               coverage_radius(cfg), avail),
                     jnp.zeros((), i32), n_drop, n_rej)
     new_state = RoundState(global_params, client_params, gains, new_stale,
-                           key, round_idx, scen, None, new_faults)
+                           key, round_idx, scen, None, new_faults, new_warm)
     if spec.telemetry:
         tr = telemetry.round_trace(
             cfg, spec, round_idx=round_idx, rc_all=rc_all, z=z,
@@ -1357,7 +1537,8 @@ def _client_shardings(state: RoundState, bundle: RoundBundle,
         global_params=jax.tree.map(lambda _: rep, state.global_params),
         client_params=jax.tree.map(lambda _: cl, state.client_params),
         gains=cl, staleness=cl, key=rep, round_idx=rep, scenario=scen_sh,
-        buffer=buf_sh, faults=flt_sh)
+        buffer=buf_sh, faults=flt_sh,
+        warm=cl if state.warm is not None else None)
     bundle_sh = RoundBundle(dist=cl, x=cl, y=cl, counts=cl,
                             test_x=rep, test_y=rep)
     return state_sh, bundle_sh
@@ -1431,6 +1612,9 @@ def pad_clients(cfg, state: RoundState, bundle: RoundBundle, multiple: int):
         # inert clients never admit, so their retry ledger stays zero
         state = state._replace(faults=state.faults._replace(
             attempts=const(state.faults.attempts, 0)))
+    if state.warm is not None:
+        # inert clients are never assigned, so their seed stays -1
+        state = state._replace(warm=const(state.warm, -1))
     bundle = bundle._replace(
         dist=const(bundle.dist, far), x=rep_last(bundle.x),
         y=rep_last(bundle.y), counts=const(bundle.counts, 0.0))
